@@ -1,0 +1,103 @@
+"""Shared benchmark harness: timers, datasets, CSV rows.
+
+Every ``fig*.py`` exposes ``run(scale: float) -> list[Row]``; run.py
+aggregates. Datasets mirror Table 1's structure at CPU-feasible scale
+(the paper's 1K/2K/4K become 128–384 px wide clips; overlaps 30/50/75%
+are preserved exactly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import time
+from contextlib import contextmanager
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.store import VSS
+from repro.data.video import synthesize_overlapping_pair, synthesize_road
+
+
+@dataclasses.dataclass
+class Row:
+    bench: str
+    name: str
+    value: float
+    unit: str
+    notes: str = ""
+
+    def csv(self) -> str:
+        return f"{self.bench},{self.name},{self.value:.6g},{self.unit},{self.notes}"
+
+
+@contextmanager
+def timer() -> Iterator[list]:
+    out = [0.0]
+    t0 = time.perf_counter()
+    yield out
+    out[0] = time.perf_counter() - t0
+
+
+def fresh_store(**kw) -> VSS:
+    return VSS(tempfile.mkdtemp(prefix="vssbench_"), **kw)
+
+
+# dataset cache (one synthesis per process)
+_CACHE = {}
+
+
+def road(frames=240, width=192, height=108, seed=0) -> np.ndarray:
+    key = ("road", frames, width, height, seed)
+    if key not in _CACHE:
+        _CACHE[key] = synthesize_road(
+            frames, width=width, height=height, seed=seed
+        )
+    return _CACHE[key]
+
+
+def pair(frames=24, width=192, height=108, overlap=0.5, seed=1,
+         pan_speed=0.0):
+    key = ("pair", frames, width, height, overlap, seed, pan_speed)
+    if key not in _CACHE:
+        _CACHE[key] = synthesize_overlapping_pair(
+            frames, width=width, height=height, overlap=overlap, seed=seed,
+            pan_speed=pan_speed,
+        )
+    return _CACHE[key]
+
+
+def file_baseline_write(frames: np.ndarray, path: str) -> float:
+    """Plain local-FS write of the encoded stream (the paper's baseline)."""
+    from repro import codec
+
+    with timer() as t:
+        with open(path, "wb") as f:
+            for _, chunk in codec.split_into_gops(frames, "tvc-hi"):
+                f.write(codec.serialize_gop(codec.encode_gop(chunk, "tvc-hi")))
+        os.fsync(f.fileno()) if not f.closed else None
+    return t[0]
+
+
+def file_baseline_read_all(path: str) -> tuple:
+    """Decode every GOP from a monolithic file (no index, no views)."""
+    from repro import codec
+
+    out = []
+    with timer() as t:
+        with open(path, "rb") as f:
+            data = f.read()
+        off = 0
+        while off < len(data):
+            hlen = int.from_bytes(data[off + 4: off + 8], "little")
+            import json
+            header = json.loads(data[off + 8: off + 8 + hlen].decode())
+            t_, h, w, c = header["shape"]
+            # payload length is unknown without an index — scan for magic
+            nxt = data.find(b"TVC1", off + 8 + hlen)
+            end = nxt if nxt != -1 else len(data)
+            enc = codec.deserialize_gop(data[off:end])
+            out.append(codec.decode_gop(enc))
+            off = end
+    return np.concatenate(out), t[0]

@@ -1,0 +1,56 @@
+"""Fig. 14 — read throughput, same-format and cross-format.
+
+Claim checked: same-format VSS reads are close to the local FS; VSS
+additionally serves *any* output format (the FS baseline cannot).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+from benchmarks.common import (
+    Row,
+    file_baseline_read_all,
+    fresh_store,
+    road,
+    timer,
+)
+from repro import codec
+
+
+def run(scale: float = 1.0) -> list:
+    frames = road(int(180 * scale))
+    rows = []
+    vss = fresh_store()
+    vss.write("v", frames, fps=30.0, codec="h264", gop_frames=15)
+    mib = frames.nbytes / 2**20
+
+    # same-format (h264 → h264): essentially a concatenating copy
+    with timer() as t:
+        vss.read("v", codec="h264", cache=False, quality_eps_db=30.0)
+    rows.append(Row("fig14", "vss_h264_to_h264", mib / t[0], "MiB/s"))
+
+    with timer() as t:
+        vss.read("v", codec="rgb", cache=False, quality_eps_db=30.0)
+    rows.append(Row("fig14", "vss_h264_to_rgb", mib / t[0], "MiB/s"))
+
+    with timer() as t:
+        vss.read("v", codec="hevc", cache=False, quality_eps_db=30.0)
+    rows.append(Row("fig14", "vss_h264_to_hevc", mib / t[0], "MiB/s"))
+    vss.close()
+
+    # local FS: read the monolithic file (same-format only)
+    path = os.path.join(tempfile.mkdtemp(), "v.bin")
+    with open(path, "wb") as f:
+        for _, chunk in codec.split_into_gops(frames, "h264"):
+            f.write(codec.serialize_gop(codec.encode_gop(chunk, "h264")))
+    with timer() as t:
+        with open(path, "rb") as f:
+            f.read()
+    rows.append(Row("fig14", "fs_h264_to_h264", mib / t[0], "MiB/s"))
+    _, t_dec = file_baseline_read_all(path)
+    rows.append(Row("fig14", "fs_h264_to_rgb", mib / t_dec, "MiB/s",
+                    "client-side decode"))
+    rows.append(Row("fig14", "fs_h264_to_hevc", 0.0, "MiB/s",
+                    "unsupported (x in the paper's figure)"))
+    return rows

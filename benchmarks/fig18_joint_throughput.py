@@ -1,0 +1,32 @@
+"""Fig. 18 — read/write throughput with joint compression on vs off.
+
+Claim checked: reads of jointly-compressed video carry only modest
+overhead; joint writes are comparable to separate writes.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, fresh_store, pair, timer
+
+
+def run(scale: float = 1.0) -> list:
+    rows = []
+    left, right, _ = pair(max(12, int(24 * scale)), width=256, height=144,
+                          overlap=0.5, seed=7)
+    mib = (left.nbytes + right.nbytes) / 2**20
+
+    for joint in (False, True):
+        vss = fresh_store()
+        with timer() as t_w:
+            vss.write("l", left, fps=30.0, codec="h264", gop_frames=6)
+            vss.write("r", right, fps=30.0, codec="h264", gop_frames=6)
+            if joint:
+                vss.apply_joint_compression(["l", "r"], merge="mean",
+                                            tau_db=24.0)
+        with timer() as t_r:
+            vss.read("l", codec="rgb", cache=False, quality_eps_db=20.0)
+            vss.read("r", codec="rgb", cache=False, quality_eps_db=20.0)
+        tag = "joint" if joint else "separate"
+        rows.append(Row("fig18", f"write_{tag}", mib / t_w[0], "MiB/s"))
+        rows.append(Row("fig18", f"read_{tag}", mib / t_r[0], "MiB/s"))
+        vss.close()
+    return rows

@@ -1,0 +1,33 @@
+"""Fig. 20 — reading deferred-compressed raw fragments at various levels.
+
+Claim checked: zstd-wrapped raw reads are slower than plain raw but
+remain much faster than full codec decode at every level.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, road, timer
+from repro import codec
+from repro.core.deferred import unwrap_bytes, wrap_bytes
+
+
+def run(scale: float = 1.0) -> list:
+    frames = road(int(120 * scale))
+    raw = codec.encode_gop(frames, "rgb")
+    data = codec.serialize_gop(raw)
+    mib = frames.nbytes / 2**20
+    rows = []
+    with timer() as t:
+        codec.decode_gop(codec.deserialize_gop(data))
+    rows.append(Row("fig20", "raw_read", mib / t[0], "MiB/s"))
+    for level in (1, 7, 13, 19):
+        wrapped = wrap_bytes(data, level)
+        with timer() as t:
+            codec.decode_gop(codec.deserialize_gop(unwrap_bytes(wrapped)))
+        rows.append(Row("fig20", f"zstd_level{level}", mib / t[0], "MiB/s",
+                        f"ratio={len(data)/len(wrapped):.2f}x"))
+    enc = codec.encode_gop(frames, "h264")
+    with timer() as t:
+        codec.decode_gop(enc)
+    rows.append(Row("fig20", "codec_decode", mib / t[0], "MiB/s",
+                    "traditional video codec path"))
+    return rows

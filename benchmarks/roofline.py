@@ -1,0 +1,58 @@
+"""§Roofline — render the dry-run roofline table from results/*.jsonl.
+
+This benchmark consumes the compiled-artifact records produced by
+``python -m repro.launch.dryrun --all --out results/dryrun_baseline.jsonl``
+(and any hillclimb variants written next to it). It never compiles
+anything itself: the dry-run is the measurement, this is the report.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Row
+
+SOURCES = (
+    os.path.join("results", "dryrun_v2_baseline.jsonl"),
+    os.path.join("results", "dryrun_v2_opt.jsonl"),
+    os.path.join("results", "hillclimb.jsonl"),
+    os.path.join("results", "dryrun_baseline.jsonl"),  # v1 meter (legacy)
+)
+
+
+def load():
+    out = []
+    seen_v2 = False
+    for path in SOURCES:
+        if not os.path.exists(path):
+            continue
+        if path.endswith("dryrun_baseline.jsonl") and seen_v2:
+            continue  # v2 records supersede the v1-metered sweep
+        recs = [json.loads(l) for l in open(path)]
+        if recs and "v2" in path:
+            seen_v2 = True
+        out.extend(recs)
+    return out
+
+
+def run(scale: float = 1.0) -> list:
+    rows = []
+    for rec in load():
+        rf = rec["roofline"]
+        tag = f"{rec['arch']}.{rec['shape']}.{rec['mesh']}"
+        if rec.get("tag"):
+            tag += f".{rec['tag']}"
+        rows.append(Row("roofline", f"{tag}.compute", rf["compute_s"], "s"))
+        rows.append(Row("roofline", f"{tag}.memory", rf["memory_s"], "s"))
+        rows.append(Row("roofline", f"{tag}.collective",
+                        rf["collective_s"], "s"))
+        rows.append(Row(
+            "roofline", f"{tag}.fraction",
+            100 * rf["roofline_fraction"], "%",
+            f"dominant={rf['dominant']}"
+            f" useful={rf['useful_flops_fraction']:.2f}",
+        ))
+    if not rows:
+        rows.append(Row("roofline", "missing", 0, "-",
+                        "run repro.launch.dryrun --all first"))
+    return rows

@@ -1,0 +1,62 @@
+"""Benchmark runner — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 1.0] [--only fig10,...]
+
+Prints ``bench,name,value,unit,notes`` CSV to stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = (
+    "fig10_long_reads",
+    "fig11_pair_selection",
+    "fig12_short_reads",
+    "fig13_deferred_write",
+    "fig14_format_flex",
+    "fig15_write_throughput",
+    "fig16_eviction",
+    "fig17_joint_storage",
+    "fig18_joint_throughput",
+    "fig19_joint_overhead",
+    "fig20_zstd_read",
+    "fig21_end_to_end",
+    "table2_joint_quality",
+    "roofline",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module prefixes")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    print("bench,name,value,unit,notes")
+    failed = []
+    for mod_name in MODULES:
+        if only and not any(mod_name.startswith(o) for o in only):
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            for row in mod.run(args.scale):
+                print(row.csv(), flush=True)
+            print(f"# {mod_name} done in {time.perf_counter()-t0:.1f}s",
+                  flush=True)
+        except Exception as e:
+            failed.append(mod_name)
+            print(f"# {mod_name} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

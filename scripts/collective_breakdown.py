@@ -1,0 +1,122 @@
+"""Dev tool: attribute per-chip collective wire bytes + HBM traffic to
+source ops (from HLO metadata) for one dry-run cell."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import collections
+import re
+import sys
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.launch import hlo_analysis as HA
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import *
+from repro.launch.steps import *
+from repro.models import model as M
+from repro.models.sharding import ShardCtx, param_shardings
+
+META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def build(arch, shape_name, **ctx_kw):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    ctx = ShardCtx(mesh, **ctx_kw)
+    if shape.kind == "train":
+        n_micro = max(1, shape.global_batch // ctx.dp_size)
+        hyper = TrainHyper(num_microbatches=n_micro)
+        state = abstract_train_state(cfg, hyper)
+        st_sh = state_shardings(state, mesh)
+        batch = batch_specs(cfg, shape)
+        b_sh = batch_shardings(batch, mesh)
+        step = make_train_step(cfg, ctx, hyper)
+        jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                         out_shardings=(st_sh, None), donate_argnums=(0,))
+        return jitted.lower(state, batch).compile()
+    params = M.init_model_abstract(cfg)
+    p_sh = param_shardings(params, mesh)
+    batch = batch_specs(cfg, shape)
+    b_sh = batch_shardings(batch, mesh)
+    cache = cache_specs(cfg, shape.global_batch, shape.seq_len)
+    c_sh = cache_shardings(cache, mesh)
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, ctx)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(2,))
+        return jitted.lower(params, batch, cache).compile()
+    step = make_decode_step(cfg, ctx)
+    jitted = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh["tokens"]),
+                     out_shardings=(None, c_sh), donate_argnums=(1,))
+    return jitted.lower(params, cache, batch["tokens"]).compile()
+
+
+def breakdown(text, kind="wire"):
+    comps = HA.parse_computations(text)
+    edges = HA._edges(comps)
+    mult, fused = HA._multipliers(comps, edges)
+    raw_lines = {}
+    for line in text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=", line)
+        if m:
+            raw_lines[m.group(1)] = line
+    by_op = collections.Counter()
+    for c in comps.values():
+        m = mult[c.name]
+        if m == 0:
+            continue
+        for ins in c.instrs:
+            op = ins.opcode
+            base = op[:-6] if op.endswith("-start") else op
+            full = raw_lines.get(ins.name, ins.line)
+            meta = META_RE.search(full)
+            label = meta.group(1)[:90] if meta else "?"
+            if kind == "wire" and base in HA.COLLECTIVES:
+                n = HA._group_size(full)
+                nbytes = HA.shape_bytes(ins.type_str)
+                if op.endswith("-start"):
+                    nbytes /= 2
+                if base == "reduce-scatter":
+                    nbytes *= n
+                if n > 1:
+                    by_op[f"{base} :: {label}"] += m * nbytes * HA._RING[base](n)
+            elif kind == "hbm" and not fused[c.name] and (
+                op not in HA._SKIP_HBM and base not in HA.COLLECTIVES
+                and not op.endswith("-done")
+            ):
+                out_t = ins.type_str
+                out_b = HA.shape_bytes(out_t)
+                ots = [c.symbols[o] for o in HA._OPERAND_RE.findall(ins.rest)
+                       if o in c.symbols]
+                cap = None
+                if op in ("dynamic-slice", "gather"):
+                    cap = max(out_b, 256)
+                elif op == "fusion" and "kind=kInput" not in ins.line:
+                    cap = max(4 * out_b, 16384)
+                aliased, nbytes = False, 0
+                for t in ots:
+                    if not aliased and t == out_t:
+                        aliased = True
+                        continue
+                    b = HA.shape_bytes(t)
+                    nbytes += min(b, cap) if cap is not None else b
+                if not aliased:
+                    nbytes += out_b
+                by_op[f"{op} :: {label}"] += m * nbytes
+    return by_op
+
+
+if __name__ == "__main__":
+    arch, shape = sys.argv[1], sys.argv[2]
+    kind = sys.argv[3] if len(sys.argv) > 3 else "wire"
+    flags = {k: True for k in sys.argv[4:]}
+    compiled = build(arch, shape, **flags)
+    by = breakdown(compiled.as_text(), kind)
+    total = sum(by.values())
+    unit = 50e9 if kind == "wire" else 819e9
+    print(f"TOTAL {kind}: {total/1e9:.1f} GB/chip = {total/unit:.3f}s")
+    for label, b in by.most_common(20):
+        print(f"  {b/1e9:9.2f} GB  {100*b/total:5.1f}%  {label}")

@@ -1,0 +1,58 @@
+"""Render the §Roofline markdown table from the final sweep JSONLs."""
+import json
+import sys
+
+BASE = "results/dryrun_v2_baseline.jsonl"
+OPT = "results/dryrun_v2_opt.jsonl"
+
+
+def load(path):
+    try:
+        return {
+            (r["arch"], r["shape"], r["mesh"]): r
+            for r in map(json.loads, open(path))
+        }
+    except FileNotFoundError:
+        return {}
+
+
+def fmt(r):
+    rf = r["roofline"]
+    return (f"{rf['compute_s']:.3f} | {rf['memory_s']:.3f} | "
+            f"{rf['collective_s']:.3f} | {rf['dominant'][:4]} | "
+            f"{100*rf['roofline_fraction']:.2f}")
+
+
+def main():
+    base = load(BASE)
+    opt = load(OPT)
+    print("| arch | shape | mesh | GiB/chip | comp_s | mem_s | coll_s |"
+          " dom | roof% | opt: mem_s | opt: coll_s | opt roof% |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(base):
+        r = base[key]
+        rf = r["roofline"]
+        o = opt.get(key)
+        orf = o["roofline"] if o else None
+        print(
+            f"| {key[0]} | {key[1]} | {key[2]} |"
+            f" {r['resident_bytes_per_chip']/2**30:.2f} |"
+            f" {rf['compute_s']:.3f} | {rf['memory_s']:.3f} |"
+            f" {rf['collective_s']:.3f} | {rf['dominant'][:4]} |"
+            f" {100*rf['roofline_fraction']:.2f} |"
+            + (f" {orf['memory_s']:.3f} | {orf['collective_s']:.3f} |"
+               f" {100*orf['roofline_fraction']:.2f} |" if orf
+               else " - | - | - |")
+        )
+    # aggregates
+    if base:
+        dom = {}
+        for r in base.values():
+            dom[r["roofline"]["dominant"]] = dom.get(
+                r["roofline"]["dominant"], 0) + 1
+        print(f"\ncells: {len(base)}; dominant-term counts: {dom}",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

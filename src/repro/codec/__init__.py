@@ -1,0 +1,14 @@
+from repro.codec.tvc import (  # noqa: F401
+    CODEC_ALIASES,
+    TIERS,
+    EncodedGOP,
+    Tier,
+    canonical_codec,
+    decode_gop,
+    deserialize_gop,
+    encode_gop,
+    is_compressed_codec,
+    serialize_gop,
+    transcode_gop,
+)
+from repro.codec.gop import split_into_gops, UNCOMPRESSED_BLOCK_BYTES  # noqa: F401

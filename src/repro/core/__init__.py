@@ -1,0 +1,14 @@
+"""The paper's primary contribution: the VSS storage manager."""
+from repro.core.store import VSS, ReadResult, VSSWriter, resample  # noqa: F401
+from repro.core.types import (  # noqa: F401
+    DEFAULT_QUALITY_EPS_DB,
+    Fragment,
+    GopMeta,
+    PhysicalMeta,
+    PhysicalParams,
+    SpatialParams,
+    TemporalParams,
+    chain_mse_bound,
+    mse_to_psnr,
+    psnr_to_mse,
+)

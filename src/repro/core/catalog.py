@@ -1,0 +1,377 @@
+"""SQLite-backed catalog (the paper's prototype also uses SQLite).
+
+Control-plane only: GOP payloads live as one object per GOP on disk
+(``<root>/<logical>/<physical_id>/<index>.tvc``); the catalog stores the
+physical-video metadata and the non-clustered temporal index (Figure 2),
+plus the LRU clock and joint-compression records.
+
+Thread-safe via a single connection + lock (VSS writes are streaming and
+may race reads; SQLite serializes beneath us).
+"""
+from __future__ import annotations
+
+import json
+import sqlite3
+import threading
+import time
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.types import Box, GopMeta, PhysicalMeta
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS logical (
+    name TEXT PRIMARY KEY,
+    created REAL,
+    budget_bytes INTEGER,           -- cache budget (§4)
+    original_physical INTEGER
+);
+CREATE TABLE IF NOT EXISTS physical (
+    id INTEGER PRIMARY KEY AUTOINCREMENT,
+    logical TEXT NOT NULL,
+    width INTEGER, height INTEGER, fps REAL,
+    codec TEXT,
+    roi_x0 INTEGER, roi_y0 INTEGER, roi_x1 INTEGER, roi_y1 INTEGER,
+    t_start REAL, t_end REAL,
+    mse_bound REAL,
+    parent_is_original INTEGER,
+    is_original INTEGER,
+    created REAL
+);
+CREATE INDEX IF NOT EXISTS physical_logical ON physical(logical);
+CREATE TABLE IF NOT EXISTS gop (
+    id INTEGER PRIMARY KEY AUTOINCREMENT,
+    physical_id INTEGER NOT NULL,
+    idx INTEGER,
+    start_frame INTEGER,
+    num_frames INTEGER,
+    nbytes INTEGER,
+    path TEXT,
+    zwrapped INTEGER DEFAULT 0,
+    lru_seq INTEGER DEFAULT 0,
+    joint_ref INTEGER
+);
+CREATE INDEX IF NOT EXISTS gop_physical ON gop(physical_id, start_frame);
+CREATE TABLE IF NOT EXISTS joint (
+    id INTEGER PRIMARY KEY AUTOINCREMENT,
+    gop_a INTEGER, gop_b INTEGER,
+    merge TEXT,
+    segments TEXT,                -- JSON list: homography + partition + paths
+    g_scale REAL DEFAULT 1.0,     -- mixed-resolution upscale factor (§5.1.2)
+    nbytes INTEGER,
+    duplicate INTEGER DEFAULT 0   -- near-identity H: GOP b is a pointer to a
+);
+CREATE TABLE IF NOT EXISTS counters (name TEXT PRIMARY KEY, value INTEGER);
+INSERT OR IGNORE INTO counters VALUES ('lru_clock', 0);
+"""
+
+
+def _physical_from_row(r) -> PhysicalMeta:
+    return PhysicalMeta(
+        physical_id=r[0], logical=r[1], width=r[2], height=r[3], fps=r[4],
+        codec=r[5], roi=(r[6], r[7], r[8], r[9]), t_start=r[10], t_end=r[11],
+        mse_bound=r[12], parent_is_original=bool(r[13]),
+        is_original=bool(r[14]), created=r[15],
+    )
+
+
+_PHYS_COLS = (
+    "id, logical, width, height, fps, codec, roi_x0, roi_y0, roi_x1, roi_y1,"
+    " t_start, t_end, mse_bound, parent_is_original, is_original, created"
+)
+
+
+def _gop_from_row(r) -> GopMeta:
+    return GopMeta(
+        gop_id=r[0], physical_id=r[1], index=r[2], start_frame=r[3],
+        num_frames=r[4], nbytes=r[5], path=r[6], zwrapped=bool(r[7]),
+        lru_seq=r[8], joint_ref=r[9],
+    )
+
+
+_GOP_COLS = (
+    "id, physical_id, idx, start_frame, num_frames, nbytes, path, zwrapped,"
+    " lru_seq, joint_ref"
+)
+
+
+class Catalog:
+    def __init__(self, db_path: str):
+        self._conn = sqlite3.connect(db_path, check_same_thread=False)
+        self._lock = threading.RLock()
+        with self._lock:
+            self._conn.executescript(_SCHEMA)
+            self._conn.commit()
+
+    # -- logical ---------------------------------------------------------
+    def create_logical(self, name: str, budget_bytes: int) -> None:
+        with self._lock:
+            self._conn.execute(
+                "INSERT INTO logical(name, created, budget_bytes,"
+                " original_physical) VALUES (?,?,?,NULL)",
+                (name, time.time(), budget_bytes),
+            )
+            self._conn.commit()
+
+    def logical_exists(self, name: str) -> bool:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT 1 FROM logical WHERE name=?", (name,)
+            ).fetchone()
+        return row is not None
+
+    def list_logical(self) -> List[str]:
+        with self._lock:
+            rows = self._conn.execute("SELECT name FROM logical").fetchall()
+        return [r[0] for r in rows]
+
+    def drop_logical(self, name: str) -> List[str]:
+        """Delete a logical video and all its physical/GOP rows; returns
+        the orphaned GOP object paths for the caller to unlink."""
+        with self._lock:
+            paths = [
+                r[0]
+                for r in self._conn.execute(
+                    "SELECT g.path FROM gop g JOIN physical p ON"
+                    " g.physical_id = p.id WHERE p.logical=?",
+                    (name,),
+                ).fetchall()
+            ]
+            self._conn.execute(
+                "DELETE FROM gop WHERE physical_id IN"
+                " (SELECT id FROM physical WHERE logical=?)",
+                (name,),
+            )
+            self._conn.execute("DELETE FROM physical WHERE logical=?", (name,))
+            self._conn.execute("DELETE FROM logical WHERE name=?", (name,))
+            self._conn.commit()
+        return paths
+
+    def set_original(self, name: str, physical_id: int) -> None:
+        with self._lock:
+            self._conn.execute(
+                "UPDATE logical SET original_physical=? WHERE name=?",
+                (physical_id, name),
+            )
+            self._conn.commit()
+
+    def get_budget(self, name: str) -> int:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT budget_bytes FROM logical WHERE name=?", (name,)
+            ).fetchone()
+        return row[0]
+
+    def set_budget(self, name: str, budget_bytes: int) -> None:
+        with self._lock:
+            self._conn.execute(
+                "UPDATE logical SET budget_bytes=? WHERE name=?",
+                (budget_bytes, name),
+            )
+            self._conn.commit()
+
+    def get_original_id(self, name: str) -> Optional[int]:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT original_physical FROM logical WHERE name=?", (name,)
+            ).fetchone()
+        return row[0] if row else None
+
+    # -- physical --------------------------------------------------------
+    def add_physical(
+        self, logical: str, width: int, height: int, fps: float, codec: str,
+        roi: Box, t_start: float, t_end: float, mse_bound: float,
+        parent_is_original: bool, is_original: bool,
+    ) -> int:
+        with self._lock:
+            cur = self._conn.execute(
+                "INSERT INTO physical(logical, width, height, fps, codec,"
+                " roi_x0, roi_y0, roi_x1, roi_y1, t_start, t_end, mse_bound,"
+                " parent_is_original, is_original, created)"
+                " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
+                (logical, width, height, fps, codec, *roi, t_start, t_end,
+                 mse_bound, int(parent_is_original), int(is_original),
+                 time.time()),
+            )
+            self._conn.commit()
+            return cur.lastrowid
+
+    def get_physical(self, physical_id: int) -> PhysicalMeta:
+        with self._lock:
+            row = self._conn.execute(
+                f"SELECT {_PHYS_COLS} FROM physical WHERE id=?", (physical_id,)
+            ).fetchone()
+        if row is None:
+            raise KeyError(f"physical {physical_id} not found")
+        return _physical_from_row(row)
+
+    def physicals_for(self, logical: str) -> List[PhysicalMeta]:
+        with self._lock:
+            rows = self._conn.execute(
+                f"SELECT {_PHYS_COLS} FROM physical WHERE logical=?",
+                (logical,),
+            ).fetchall()
+        return [_physical_from_row(r) for r in rows]
+
+    def extend_physical_time(self, physical_id: int, t_end: float) -> None:
+        """Streaming writes push t_end forward as GOPs land (§2)."""
+        with self._lock:
+            self._conn.execute(
+                "UPDATE physical SET t_end=MAX(t_end, ?) WHERE id=?",
+                (t_end, physical_id),
+            )
+            self._conn.commit()
+
+    def set_physical_bound(self, physical_id: int, mse_bound: float) -> None:
+        with self._lock:
+            self._conn.execute(
+                "UPDATE physical SET mse_bound=? WHERE id=?",
+                (mse_bound, physical_id),
+            )
+            self._conn.commit()
+
+    def delete_physical(self, physical_id: int) -> None:
+        with self._lock:
+            self._conn.execute("DELETE FROM gop WHERE physical_id=?",
+                               (physical_id,))
+            self._conn.execute("DELETE FROM physical WHERE id=?",
+                               (physical_id,))
+            self._conn.commit()
+
+    # -- gops (temporal index) --------------------------------------------
+    def add_gop(
+        self, physical_id: int, index: int, start_frame: int,
+        num_frames: int, nbytes: int, path: str, lru_seq: int = 0,
+    ) -> int:
+        with self._lock:
+            cur = self._conn.execute(
+                "INSERT INTO gop(physical_id, idx, start_frame, num_frames,"
+                " nbytes, path, lru_seq) VALUES (?,?,?,?,?,?,?)",
+                (physical_id, index, start_frame, num_frames, nbytes, path,
+                 lru_seq),
+            )
+            self._conn.commit()
+            return cur.lastrowid
+
+    def gops_for(self, physical_id: int) -> List[GopMeta]:
+        with self._lock:
+            rows = self._conn.execute(
+                f"SELECT {_GOP_COLS} FROM gop WHERE physical_id=?"
+                " ORDER BY start_frame", (physical_id,),
+            ).fetchall()
+        return [_gop_from_row(r) for r in rows]
+
+    def gops_in_range(
+        self, physical_id: int, frame_start: int, frame_end: int
+    ) -> List[GopMeta]:
+        """Temporal-index lookup: GOPs overlapping [frame_start, frame_end)."""
+        with self._lock:
+            rows = self._conn.execute(
+                f"SELECT {_GOP_COLS} FROM gop WHERE physical_id=?"
+                " AND start_frame < ? AND start_frame + num_frames > ?"
+                " ORDER BY start_frame",
+                (physical_id, frame_end, frame_start),
+            ).fetchall()
+        return [_gop_from_row(r) for r in rows]
+
+    def get_gop(self, gop_id: int) -> GopMeta:
+        with self._lock:
+            row = self._conn.execute(
+                f"SELECT {_GOP_COLS} FROM gop WHERE id=?", (gop_id,)
+            ).fetchone()
+        if row is None:
+            raise KeyError(f"gop {gop_id} not found")
+        return _gop_from_row(row)
+
+    def delete_gop(self, gop_id: int) -> None:
+        with self._lock:
+            self._conn.execute("DELETE FROM gop WHERE id=?", (gop_id,))
+            self._conn.commit()
+
+    def update_gop(self, gop_id: int, **fields) -> None:
+        cols = {"nbytes", "path", "zwrapped", "lru_seq", "joint_ref",
+                "num_frames", "start_frame", "idx"}
+        sets, vals = [], []
+        for k, v in fields.items():
+            if k not in cols:
+                raise ValueError(f"bad gop field {k}")
+            sets.append(f"{k}=?")
+            vals.append(int(v) if isinstance(v, bool) else v)
+        with self._lock:
+            self._conn.execute(
+                f"UPDATE gop SET {', '.join(sets)} WHERE id=?",
+                (*vals, gop_id),
+            )
+            self._conn.commit()
+
+    def touch_gops(self, gop_ids: Sequence[int]) -> int:
+        """Bump the LRU clock and stamp the given GOPs; returns the tick."""
+        if not gop_ids:
+            return self.lru_clock()
+        with self._lock:
+            self._conn.execute(
+                "UPDATE counters SET value = value + 1 WHERE name='lru_clock'"
+            )
+            tick = self._conn.execute(
+                "SELECT value FROM counters WHERE name='lru_clock'"
+            ).fetchone()[0]
+            self._conn.executemany(
+                "UPDATE gop SET lru_seq=? WHERE id=?",
+                [(tick, g) for g in gop_ids],
+            )
+            self._conn.commit()
+            return tick
+
+    def lru_clock(self) -> int:
+        with self._lock:
+            return self._conn.execute(
+                "SELECT value FROM counters WHERE name='lru_clock'"
+            ).fetchone()[0]
+
+    def total_bytes(self, logical: str) -> int:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT COALESCE(SUM(g.nbytes), 0) FROM gop g JOIN physical p"
+                " ON g.physical_id = p.id WHERE p.logical=?",
+                (logical,),
+            ).fetchone()
+        return row[0]
+
+    # -- joint compression records (§5.1) ---------------------------------
+    def add_joint(
+        self, gop_a: int, gop_b: int, merge: str, segments,
+        nbytes: int, duplicate: bool = False, g_scale: float = 1.0,
+    ) -> int:
+        with self._lock:
+            cur = self._conn.execute(
+                "INSERT INTO joint(gop_a, gop_b, merge, segments, g_scale,"
+                " nbytes, duplicate) VALUES (?,?,?,?,?,?,?)",
+                (gop_a, gop_b, merge, json.dumps(segments), g_scale, nbytes,
+                 int(duplicate)),
+            )
+            self._conn.commit()
+            return cur.lastrowid
+
+    def get_joint(self, joint_id: int):
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT id, gop_a, gop_b, merge, segments, g_scale, nbytes,"
+                " duplicate FROM joint WHERE id=?", (joint_id,),
+            ).fetchone()
+        if row is None:
+            raise KeyError(f"joint {joint_id} not found")
+        return {
+            "id": row[0], "gop_a": row[1], "gop_b": row[2], "merge": row[3],
+            "segments": json.loads(row[4]), "g_scale": row[5],
+            "nbytes": row[6], "duplicate": bool(row[7]),
+        }
+
+    def gops_with_joint_ref(self, joint_id: int) -> List[int]:
+        with self._lock:
+            rows = self._conn.execute(
+                "SELECT id FROM gop WHERE joint_ref=?", (joint_id,)
+            ).fetchall()
+        return [r[0] for r in rows]
+
+    def close(self) -> None:
+        with self._lock:
+            self._conn.close()

@@ -1,0 +1,175 @@
+"""Transcode + look-back cost models — §3.1.
+
+Transcode cost:   c_t(f, P, S) = α(S_f, P_f, S, P) · |f|
+with α the per-pixel cost of converting (spatial, physical) format
+(S,P) → (S',P'). The paper calibrates α by running vbench on the install
+hardware and interpolating piecewise-linearly over resolution; we do the
+same against TVC (`calibrate()` times decode/encode/transcode per tier
+at several resolutions and persists the table). A shipped default table
+keeps the model usable without calibration.
+
+Look-back cost:   c_l(Ω, f) = |A − Ω| + η·|(Δ − A) − Ω|,  η = 1.45
+(Costa et al.: dependent frames ≈45% costlier to decode than
+independent ones). For TVC, A = the I-frame of the GOP containing the
+fragment start and Δ−A = the P-frames preceding the start within that
+GOP; Ω is the set of frames already decoded by the previous selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.codec import canonical_codec
+
+ETA = 1.45  # dependent-frame decode premium
+
+# Default α table: per-pixel relative cost, keyed (codec_in, codec_out),
+# each entry a list of (pixels_per_frame, cost_per_pixel) calibration
+# points. "rgb" decode/encode is cheap (memcpy-ish); tvc tiers pay the
+# recon chain; cross-tier transcode pays decode+encode (fused kernel
+# halves the memory traffic — reflected by the fused discount).
+_DEFAULT_POINTS = [(240 * 135, 1.0), (960 * 540, 1.0), (3840 * 2160, 1.0)]
+
+
+def _flat(scale: float):
+    return [(px, scale) for px, _ in _DEFAULT_POINTS]
+
+
+def _default_table() -> Dict[str, list]:
+    tiers = ("tvc-ll", "tvc-hi", "tvc-med", "tvc-lo")
+    table: Dict[str, list] = {}
+    for cin in ("rgb",) + tiers:
+        for cout in ("rgb",) + tiers:
+            if cin == "rgb" and cout == "rgb":
+                cost = 0.15  # copy / crop only
+            elif cin == "rgb":
+                cost = 1.0  # encode
+            elif cout == "rgb":
+                cost = 1.0  # decode
+            elif cin == cout:
+                cost = 1.6  # decode + re-encode (no-op avoided by planner)
+            else:
+                cost = 1.6  # decode + re-encode (fused: see FUSED_DISCOUNT)
+            table[f"{cin}->{cout}"] = _flat(cost)
+    return table
+
+
+FUSED_DISCOUNT = 0.65  # fused Pallas transcode vs staged decode→encode
+
+
+@dataclasses.dataclass
+class CostModel:
+    """α lookup with piecewise-linear interpolation over resolution."""
+
+    table: Dict[str, list]
+    fused_transcode: bool = True
+
+    @classmethod
+    def default(cls) -> "CostModel":
+        return cls(_default_table())
+
+    @classmethod
+    def load(cls, path: str) -> "CostModel":
+        return cls(json.loads(Path(path).read_text()))
+
+    def save(self, path: str) -> None:
+        Path(path).write_text(json.dumps(self.table))
+
+    def alpha(
+        self, codec_in: str, codec_out: str, pixels_per_frame: int
+    ) -> float:
+        codec_in = canonical_codec(codec_in)
+        codec_out = canonical_codec(codec_out)
+        pts = self.table[f"{codec_in}->{codec_out}"]
+        xs = np.array([p[0] for p in pts], dtype=np.float64)
+        ys = np.array([p[1] for p in pts], dtype=np.float64)
+        a = float(np.interp(pixels_per_frame, xs, ys))
+        if (
+            self.fused_transcode
+            and codec_in != "rgb"
+            and codec_out != "rgb"
+            and codec_in != codec_out
+        ):
+            a *= FUSED_DISCOUNT
+        return a
+
+    def transcode_cost(
+        self,
+        codec_in: str,
+        codec_out: str,
+        num_pixels: int,
+        pixels_per_frame: int,
+    ) -> float:
+        """c_t = α · |f| (|f| = total pixels in the fragment)."""
+        return self.alpha(codec_in, codec_out, pixels_per_frame) * num_pixels
+
+    PASSTHROUGH_ALPHA = 0.02  # byte copy of encoded GOPs (no codec work)
+
+    def passthrough_cost(self, num_pixels: int) -> float:
+        return self.PASSTHROUGH_ALPHA * num_pixels
+
+
+def lookback_cost(
+    independent_not_decoded: int,
+    dependent_not_decoded: int,
+    eta: float = ETA,
+) -> float:
+    """c_l(Ω, f) = |A − Ω| + η·|(Δ − A) − Ω| (in frames)."""
+    return independent_not_decoded + eta * dependent_not_decoded
+
+
+# ---------------------------------------------------------------------------
+# install-time calibration (the paper's vbench step, against TVC)
+# ---------------------------------------------------------------------------
+
+def calibrate(
+    save_path: Optional[str] = None,
+    resolutions: Tuple[Tuple[int, int], ...] = ((240, 136), (480, 272)),
+    frames: int = 8,
+    seed: int = 0,
+) -> CostModel:
+    """Measure per-pixel transcode costs on this host and build α.
+
+    Times encode/decode/transcode for every codec pair at the given
+    resolutions; normalizes so rgb→tvc-hi at the smallest resolution is
+    1.0 (α is a *relative* per-pixel cost, exactly like vbench's
+    normalized scores).
+    """
+    from repro import codec as _codec
+
+    rng = np.random.default_rng(seed)
+    tiers = ("rgb", "tvc-ll", "tvc-hi", "tvc-med", "tvc-lo")
+    raw: Dict[str, list] = {f"{a}->{b}": [] for a in tiers for b in tiers}
+    norm = None
+    for (w, h) in resolutions:
+        base = rng.integers(0, 256, (h, w, 3)).astype(np.uint8)
+        clip = np.stack([np.roll(base, t, axis=1) for t in range(frames)])
+        encoded = {}
+        for cin in tiers:
+            encoded[cin] = _codec.encode_gop(clip, cin)
+        px = w * h
+        for cin in tiers:
+            for cout in tiers:
+                t0 = time.perf_counter()
+                if cin == cout == "rgb":
+                    _codec.decode_gop(encoded[cin])
+                else:
+                    _codec.transcode_gop(encoded[cin], cout)
+                dt = time.perf_counter() - t0
+                per_px = dt / (px * frames)
+                raw[f"{cin}->{cout}"].append((px, per_px))
+                if cin == "rgb" and cout == "tvc-hi" and norm is None:
+                    norm = per_px
+    norm = norm or 1.0
+    table = {
+        k: [(px, c / norm) for px, c in v] for k, v in raw.items()
+    }
+    model = CostModel(table)
+    if save_path:
+        model.save(save_path)
+    return model

@@ -1,0 +1,775 @@
+"""VSS — the storage manager (paper Figure 1 API).
+
+``write(name, S, T, P, data)`` / ``read(name, S, T, P)`` over logical
+videos; physical layout, caching, transcoding and eviction are invisible
+to callers. Reads are planned over *all* cached materialized views with
+the §3 cost model and executed fragment-by-fragment; results are
+(optionally) admitted to the cache, budgets enforced via LRU_VSS,
+deferred compression and compaction run as side effects — the full §2-§5
+pipeline.
+
+Writes are streaming and non-blocking: ``writer()`` returns a handle
+whose flushed GOPs become immediately queryable (prefix reads of a video
+still being written are supported); visibility of the *final* GOP is
+only guaranteed after ``close()``, matching the paper's caveat.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import codec as _codec
+from repro.core import compact as _compact
+from repro.core.cache import CacheManager, CachePolicy
+from repro.core.catalog import Catalog
+from repro.core.cost import ETA, CostModel
+from repro.core.deferred import DeferredCompressor, is_wrapped, unwrap_bytes
+from repro.core.quality import QualityEstimator, exact_mse
+from repro.core.select import (
+    SegmentChoice,
+    Selection,
+    SelectionProblem,
+    solve,
+)
+from repro.core.types import (
+    DEFAULT_QUALITY_EPS_DB,
+    Box,
+    Fragment,
+    GopMeta,
+    PhysicalMeta,
+    chain_mse_bound,
+    full_roi,
+    mse_to_psnr,
+)
+
+DEFAULT_BUDGET_MULTIPLE = 10.0  # §4 administrator default
+
+
+@dataclasses.dataclass
+class ReadPlan:
+    segments: List[Tuple[float, float]]
+    problem: SelectionProblem
+    selection: Selection
+    runs: List["Run"]  # indexed by SegmentChoice.video_idx
+    plan_seconds: float
+
+    def run_idx(self, seg_i: int) -> int:
+        choice_i = self.selection.assignment[seg_i]
+        return self.problem.choices[seg_i][choice_i].video_idx
+
+
+class ReadResult:
+    """Read output. For compressed outputs ``frames`` decodes lazily —
+    pass-through reads (cache hit in the requested codec) never touch
+    pixels unless the caller actually asks for them."""
+
+    def __init__(self, frames, codec, encoded, plan, fps):
+        self._frames = frames
+        self.codec = codec
+        self.encoded: Optional[List[_codec.EncodedGOP]] = encoded
+        self.plan: ReadPlan = plan
+        self.fps = fps
+
+    @property
+    def frames(self) -> np.ndarray:
+        if self._frames is None:
+            self._frames = np.concatenate(
+                [_codec.decode_gop(e) for e in self.encoded], axis=0
+            )
+        return self._frames
+
+    @property
+    def nbytes(self) -> int:
+        if self.encoded is not None:
+            return sum(e.nbytes for e in self.encoded)
+        return self.frames.nbytes
+
+
+@dataclasses.dataclass
+class Run:
+    """A contiguous run of live GOPs within one physical video."""
+
+    physical: PhysicalMeta
+    gops: List[GopMeta]
+
+    @property
+    def t_start(self) -> float:
+        return self.gops[0].start_time(self.physical.fps, self.physical.t_start)
+
+    @property
+    def t_end(self) -> float:
+        return self.gops[-1].end_time(self.physical.fps, self.physical.t_start)
+
+
+class VSS:
+    def __init__(
+        self,
+        root: str,
+        *,
+        budget_multiple: float = DEFAULT_BUDGET_MULTIPLE,
+        solver: str = "dp",
+        cost_model: Optional[CostModel] = None,
+        cache_policy: Optional[CachePolicy] = None,
+        enable_deferred: bool = True,
+        enable_compaction: bool = True,
+        use_pallas: Optional[bool] = None,
+    ):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.catalog = Catalog(os.path.join(root, "catalog.sqlite"))
+        self.budget_multiple = budget_multiple
+        self.solver = solver
+        self.cost_model = cost_model or CostModel.default()
+        self.policy = cache_policy or CachePolicy()
+        self.cache = CacheManager(self.catalog, self.policy)
+        self.quality = QualityEstimator()
+        self.deferred = DeferredCompressor(self.catalog, self.policy)
+        self.enable_deferred = enable_deferred
+        self.enable_compaction = enable_compaction
+        self.use_pallas = use_pallas
+
+    # ------------------------------------------------------------------
+    # write path
+    # ------------------------------------------------------------------
+    def writer(
+        self,
+        name: str,
+        *,
+        fps: float = 30.0,
+        codec: str = "rgb",
+        gop_frames: Optional[int] = None,
+        budget_bytes: Optional[int] = None,
+        t_start: float = 0.0,
+    ) -> "VSSWriter":
+        codec = _codec.canonical_codec(codec)
+        if self.catalog.logical_exists(name):
+            raise ValueError(f"{name!r} already exists (no-overwrite policy)")
+        self.catalog.create_logical(name, budget_bytes or 0)
+        return VSSWriter(
+            self, name, fps=fps, codec=codec, gop_frames=gop_frames,
+            budget_bytes=budget_bytes, t_start=t_start,
+        )
+
+    def write(
+        self,
+        name: str,
+        frames: np.ndarray,  # (T, H, W, C) uint8
+        *,
+        fps: float = 30.0,
+        codec: str = "rgb",
+        gop_frames: Optional[int] = None,
+        budget_bytes: Optional[int] = None,
+    ) -> PhysicalMeta:
+        w = self.writer(
+            name, fps=fps, codec=codec, gop_frames=gop_frames,
+            budget_bytes=budget_bytes,
+        )
+        w.append(frames)
+        return w.close()
+
+    # ------------------------------------------------------------------
+    # read path (§3)
+    # ------------------------------------------------------------------
+    def read(
+        self,
+        name: str,
+        *,
+        t: Optional[Tuple[float, float]] = None,
+        resolution: Optional[Tuple[int, int]] = None,  # (width, height)
+        roi: Optional[Box] = None,
+        fps: Optional[float] = None,
+        codec: str = "rgb",
+        quality_eps_db: float = DEFAULT_QUALITY_EPS_DB,
+        cache: bool = True,
+        method: Optional[str] = None,
+    ) -> ReadResult:
+        self.deferred.mark_busy()
+        try:
+            return self._read(
+                name, t=t, resolution=resolution, roi=roi, fps=fps,
+                codec=codec, quality_eps_db=quality_eps_db, cache=cache,
+                method=method,
+            )
+        finally:
+            self.deferred.mark_idle()
+
+    def _read(self, name, *, t, resolution, roi, fps, codec,
+              quality_eps_db, cache, method) -> ReadResult:
+        out_codec = _codec.canonical_codec(codec)
+        original = self._original(name)
+        t = t or (original.t_start, original.t_end)
+        s, e = t
+        eps = 1e-9
+        if s < original.t_start - eps or e > original.t_end + eps:
+            raise ValueError(
+                f"read [{s},{e}) outside original interval"
+                f" [{original.t_start},{original.t_end})"
+            )
+        if e <= s:
+            raise ValueError("empty read interval")
+        roi = roi or original.roi
+        out_fps = fps or original.fps
+        rw, rh = roi[2] - roi[0], roi[3] - roi[1]
+        resolution = resolution or (
+            int(round(rw * original.scale)), int(round(rh * original.scale))
+        )
+        scale_to = resolution[0] / rw
+
+        # 1-2. candidates + admission (quality model §3.2)
+        runs = self._candidate_runs(
+            name, s, e, roi, out_fps, out_codec, scale_to, quality_eps_db
+        )
+        if not runs:
+            raise RuntimeError("no admissible fragments cover the read")
+
+        # 3-5. transition points → segments → costs → solver
+        t0 = time.perf_counter()
+        problem, segs = self._build_problem(
+            runs, s, e, out_codec, out_fps, scale_to, roi
+        )
+        selection = solve(problem, method or self.solver)
+        plan_seconds = time.perf_counter() - t0
+        plan = ReadPlan(segs, problem, selection, runs, plan_seconds)
+
+        # 6-8. execute (same-codec cached fragments pass through without
+        # decode→re-encode; everything else goes through pixels)
+        frames = None
+        encoded = None
+        if out_codec != "rgb":
+            encoded = self._execute_encoded(
+                plan, roi, resolution, out_fps, out_codec, scale_to
+            )
+        else:
+            frames = self._execute(plan, roi, resolution, out_fps)
+            if self.enable_deferred:
+                self.deferred.on_uncompressed_read(name)
+
+        # 9. cache admission + eviction (§4)
+        if cache:
+            self._admit(
+                name, frames, encoded, s, e, roi, resolution, out_fps,
+                out_codec, plan,
+            )
+            self.cache.maybe_evict(name)
+            if self.enable_compaction:
+                _compact.compact(self.catalog, name, self.root)
+
+        return ReadResult(frames, out_codec, encoded, plan, out_fps)
+
+    # -- candidates ------------------------------------------------------
+    def _original(self, name: str) -> PhysicalMeta:
+        oid = self.catalog.get_original_id(name)
+        if oid is None:
+            raise KeyError(f"unknown logical video {name!r}")
+        return self.catalog.get_physical(oid)
+
+    def _candidate_runs(
+        self, name, s, e, roi, out_fps, out_codec, scale_to, eps_db
+    ) -> List[Run]:
+        runs: List[Run] = []
+        for p in self.catalog.physicals_for(name):
+            if not p.covers_roi(roi):
+                continue
+            if p.fps < out_fps or (p.fps / out_fps) % 1.0 > 1e-9:
+                continue  # only integer frame-rate division
+            if not self.quality.admissible(
+                p.mse_bound, p.is_original or p.parent_is_original,
+                scale_from=p.scale, scale_to=scale_to,
+                out_codec=out_codec, eps_db=eps_db,
+            ):
+                continue
+            gops = self.catalog.gops_for(p.physical_id)
+            # split into contiguous runs (eviction leaves gaps)
+            cur: List[GopMeta] = []
+            for g in gops:
+                if cur and g.start_frame != (
+                    cur[-1].start_frame + cur[-1].num_frames
+                ):
+                    runs.append(Run(p, cur))
+                    cur = []
+                cur.append(g)
+            if cur:
+                runs.append(Run(p, cur))
+        # clip to the read interval
+        out = [
+            r for r in runs if r.t_start < e - 1e-9 and r.t_end > s + 1e-9
+        ]
+        return out
+
+    # -- problem construction (§3.1) ---------------------------------------
+    def _passthrough_ok(self, p: PhysicalMeta, out_codec, out_fps, scale_to,
+                        roi) -> bool:
+        """Encoded GOPs can be returned verbatim: same codec, same
+        sampling density, same fps, identical spatial extent."""
+        return (
+            p.codec == out_codec
+            and p.codec != "rgb"
+            and p.fps == out_fps
+            and abs(p.scale - scale_to) < 1e-9
+            and tuple(p.roi) == tuple(roi)
+        )
+
+    def _build_problem(
+        self, runs: List[Run], s, e, out_codec, out_fps, scale_to, roi
+    ) -> Tuple[SelectionProblem, List[Tuple[float, float]]]:
+        pts = {s, e}
+        for r in runs:
+            for t in (r.t_start, r.t_end):
+                if s < t < e:
+                    pts.add(t)
+        pts = sorted(pts)
+        # fractional cached-view boundaries can create sub-frame slivers
+        # that contain no frame sample — they carry no pixels, drop them
+        min_dur = 0.5 / out_fps
+        segments = [
+            (a, b) for a, b in zip(pts[:-1], pts[1:]) if b - a >= min_dur
+        ]
+        if not segments:
+            segments = [(s, e)]
+        choices: List[List[SegmentChoice]] = []
+        for (a, b) in segments:
+            segment_choices = []
+            for vi, r in enumerate(runs):
+                if r.t_start > a + 1e-9 or r.t_end < b - 1e-9:
+                    continue
+                segment_choices.append(
+                    self._choice_for(vi, r, a, b, out_codec, out_fps,
+                                     scale_to, roi)
+                )
+            if not segment_choices:
+                raise RuntimeError(
+                    f"no fragment covers segment [{a},{b}) — lossless cover"
+                    " violated"
+                )
+            choices.append(segment_choices)
+        return SelectionProblem(segments, choices), segments
+
+    def _choice_for(self, vi, run: Run, a, b, out_codec, out_fps, scale_to,
+                    roi) -> SegmentChoice:
+        p = run.physical
+        frames = max(1, int(round((b - a) * p.fps)))
+        ppf = p.width * p.height
+        if self._passthrough_ok(p, out_codec, out_fps, scale_to, roi):
+            # byte copy of already-encoded GOPs — no decode chain at all
+            c_t = self.cost_model.passthrough_cost(frames * ppf)
+        else:
+            c_t = self.cost_model.transcode_cost(
+                p.codec, out_codec, frames * ppf, ppf
+            )
+        # look-back (§3.1): frames from the containing GOP's start to the
+        # entry frame must be decoded if we *enter* the video here.
+        lookback = 0.0
+        if p.codec != "rgb":
+            entry = p.frame_at(a)
+            g = self._gop_containing(run, entry)
+            offset = entry - g.start_frame
+            if offset > 0:
+                ind, dep = 1, offset - 1  # the GOP's I-frame + P-frames
+                alpha_dec = self.cost_model.alpha(p.codec, "rgb", ppf)
+                lookback = alpha_dec * ppf * (ind + ETA * dep)
+        return SegmentChoice(vi, c_t, lookback)
+
+    @staticmethod
+    def _clamp_frames(run: Run, f0: int, f1: int) -> Tuple[int, int]:
+        """Clamp a frame interval to the run's stored extent (fractional
+        read times can round one frame past the last GOP)."""
+        lo = run.gops[0].start_frame
+        hi = run.gops[-1].start_frame + run.gops[-1].num_frames
+        f0 = max(lo, min(f0, hi - 1))
+        f1 = max(f0 + 1, min(f1, hi))
+        return f0, f1
+
+    @staticmethod
+    def _gop_containing(run: Run, frame: int) -> GopMeta:
+        for g in run.gops:
+            if g.start_frame <= frame < g.start_frame + g.num_frames:
+                return g
+        return run.gops[-1]
+
+    # -- execution ---------------------------------------------------------
+    def _execute(
+        self, plan: ReadPlan, roi: Box, resolution, out_fps
+    ) -> np.ndarray:
+        pieces: List[np.ndarray] = []
+        touched: List[int] = []
+        # group consecutive segments served by the same run so the decode
+        # chain is walked once per contiguous selection
+        grouped: List[Tuple[int, float, float]] = []
+        for i, (a, b) in enumerate(plan.segments):
+            run_idx = plan.run_idx(i)
+            if grouped and grouped[-1][0] == run_idx and abs(
+                grouped[-1][2] - a
+            ) < 1e-9:
+                grouped[-1] = (run_idx, grouped[-1][1], b)
+            else:
+                grouped.append((run_idx, a, b))
+        for run_idx, a, b in grouped:
+            run = plan.runs[run_idx]
+            piece, gop_ids = self._extract(run, a, b, roi, resolution, out_fps)
+            pieces.append(piece)
+            touched.extend(gop_ids)
+        self.catalog.touch_gops(touched)
+        return np.concatenate(pieces, axis=0)
+
+    def _execute_encoded(
+        self, plan: ReadPlan, roi: Box, resolution, out_fps, out_codec,
+        scale_to,
+    ) -> List[_codec.EncodedGOP]:
+        """Produce the encoded result; same-codec fragments pass through."""
+        grouped: List[Tuple[int, float, float]] = []
+        for i, (a, b) in enumerate(plan.segments):
+            run_idx = plan.run_idx(i)
+            if grouped and grouped[-1][0] == run_idx and abs(
+                grouped[-1][2] - a
+            ) < 1e-9:
+                grouped[-1] = (run_idx, grouped[-1][1], b)
+            else:
+                grouped.append((run_idx, a, b))
+        out: List[_codec.EncodedGOP] = []
+        touched: List[int] = []
+        for run_idx, a, b in grouped:
+            run = plan.runs[run_idx]
+            if self._passthrough_ok(run.physical, out_codec, out_fps,
+                                    scale_to, roi):
+                encs, gop_ids = self._extract_encoded(run, a, b, out_codec)
+                out.extend(encs)
+            else:
+                piece, gop_ids = self._extract(
+                    run, a, b, roi, resolution, out_fps
+                )
+                out.extend(
+                    _codec.encode_gop(chunk, out_codec,
+                                      use_pallas=self.use_pallas)
+                    for _, chunk in _codec.split_into_gops(piece, out_codec)
+                )
+            touched.extend(gop_ids)
+        self.catalog.touch_gops(touched)
+        return out
+
+    def _extract_encoded(
+        self, run: Run, a, b, out_codec
+    ) -> Tuple[List[_codec.EncodedGOP], List[int]]:
+        """Byte-level GOP pass-through; partial edge GOPs are trimmed
+        through a decode→re-encode of just that GOP."""
+        p = run.physical
+        f0, f1 = self._clamp_frames(run, p.frame_at(a), p.frame_at(b))
+        out: List[_codec.EncodedGOP] = []
+        gop_ids: List[int] = []
+        for g in run.gops:
+            gs, ge = g.start_frame, g.start_frame + g.num_frames
+            if gs >= f1 or ge <= f0:
+                continue
+            gop_ids.append(g.gop_id)
+            if gs >= f0 and ge <= f1:  # fully inside: verbatim bytes
+                with open(g.path, "rb") as f:
+                    data = f.read()
+                if is_wrapped(data):
+                    data = unwrap_bytes(data)
+                out.append(_codec.deserialize_gop(data))
+            else:  # edge GOP: decode, trim, re-encode (the look-back cost)
+                frames = self._load_gop_frames(g)
+                lo = max(f0 - gs, 0)
+                hi = min(f1, ge) - gs
+                out.append(
+                    _codec.encode_gop(frames[lo:hi], out_codec,
+                                      use_pallas=self.use_pallas)
+                )
+        return out, gop_ids
+
+    def _extract(
+        self, run: Run, a, b, roi: Box, resolution, out_fps
+    ) -> Tuple[np.ndarray, List[int]]:
+        p = run.physical
+        f0, f1 = self._clamp_frames(run, p.frame_at(a), p.frame_at(b))
+        gops = [
+            g for g in run.gops
+            if g.start_frame < f1 and g.start_frame + g.num_frames > f0
+        ]
+        frames_list = []
+        for g in gops:
+            frames_list.append(self._load_gop_frames(g))
+        frames = np.concatenate(frames_list, axis=0)
+        base = gops[0].start_frame
+        frames = frames[f0 - base : f1 - base]
+        # frame-rate division
+        step = int(round(p.fps / out_fps))
+        if step > 1:
+            frames = frames[::step]
+        # spatial crop (ROI → this video's local pixel coords)
+        lx0 = int(round((roi[0] - p.roi[0]) * p.scale))
+        ly0 = int(round((roi[1] - p.roi[1]) * p.scale))
+        lx1 = int(round((roi[2] - p.roi[0]) * p.scale))
+        ly1 = int(round((roi[3] - p.roi[1]) * p.scale))
+        frames = frames[:, ly0:ly1, lx0:lx1]
+        # resample to the requested resolution
+        frames = resample(frames, resolution)
+        return frames, [g.gop_id for g in gops]
+
+    def _load_gop_frames(self, g: GopMeta) -> np.ndarray:
+        if g.joint_ref is not None:
+            from repro.core import joint as _joint
+
+            return _joint.reconstruct_gop(self, g)
+        with open(g.path, "rb") as f:
+            data = f.read()
+        if is_wrapped(data):
+            data = unwrap_bytes(data)
+        enc = _codec.deserialize_gop(data)
+        return _codec.decode_gop(enc, use_pallas=self.use_pallas)
+
+    # ------------------------------------------------------------------
+    # joint compression driver (§5.1) — candidate search + Algorithm 1
+    # ------------------------------------------------------------------
+    def apply_joint_compression(
+        self,
+        names: Optional[Sequence[str]] = None,
+        *,
+        merge: str = "unprojected",
+        tau_db: float = 24.0,
+        max_pairs: int = 64,
+    ) -> List[int]:
+        """Find overlapping GOP pairs across logical videos and jointly
+        compress them. Returns the created joint record ids."""
+        from repro.core import joint as _joint
+        from repro.core.fingerprint import CandidateIndex
+
+        names = list(names or self.catalog.list_logical())
+        index = CandidateIndex()
+        owner: Dict[int, str] = {}
+        for name in names:
+            for p in self.catalog.physicals_for(name):
+                if not p.is_original:
+                    continue
+                for g in self.catalog.gops_for(p.physical_id):
+                    if g.joint_ref is not None:
+                        continue
+                    index.add_gop(g.gop_id, self._load_gop_frames(g))
+                    owner[g.gop_id] = name
+        joint_ids: List[int] = []
+        used: set = set()
+        for a, b, _n in index.find_pairs():
+            if len(joint_ids) >= max_pairs:
+                break
+            if a in used or b in used:
+                continue
+            if owner[a] == owner[b]:
+                continue  # pairs must span different logical videos (§5.1)
+            jid = _joint.jointly_compress_gops(
+                self, a, b, merge=merge, tau_db=tau_db
+            )
+            if jid is not None:
+                joint_ids.append(jid)
+                used.add(a)
+                used.add(b)
+        return joint_ids
+
+    # -- cache admission (§4) ----------------------------------------------
+    def _admit(
+        self, name, frames, encoded, s, e, roi, resolution, out_fps,
+        out_codec, plan: ReadPlan,
+    ) -> Optional[int]:
+        original = self._original(name)
+        # skip admission when the result is identical in configuration to
+        # an existing full-coverage view (nothing new to materialize)
+        for p in self.catalog.physicals_for(name):
+            if (
+                p.codec == out_codec
+                and (p.width, p.height) == tuple(resolution)
+                and p.roi == roi
+                and p.fps == out_fps
+                and p.covers_time(s, e)
+            ):
+                return None
+        # step error: resample + compression, measured on a sample
+        parent = plan.runs[plan.run_idx(0)].physical
+        step_mse = self._measure_step_mse(
+            parent, frames, encoded, out_codec, resolution, roi
+        )
+        bound = chain_mse_bound(
+            parent.mse_bound, step_mse,
+            parent.is_original,
+        )
+        pid = self.catalog.add_physical(
+            name, resolution[0], resolution[1], out_fps, out_codec, roi,
+            s, e, bound, parent_is_original=parent.is_original,
+            is_original=False,
+        )
+        pdir = os.path.join(self.root, name, str(pid))
+        os.makedirs(pdir, exist_ok=True)
+        tick = self.catalog.lru_clock()
+        if encoded is not None:
+            start = 0
+            for i, enc in enumerate(encoded):
+                path = os.path.join(pdir, f"{i}.tvc")
+                data = _codec.serialize_gop(enc)
+                with open(path, "wb") as f:
+                    f.write(data)
+                self.catalog.add_gop(
+                    pid, i, start, enc.num_frames, len(data), path,
+                    lru_seq=tick,
+                )
+                start += enc.num_frames
+        else:
+            for i, (start, chunk) in enumerate(
+                _codec.split_into_gops(frames, "rgb")
+            ):
+                enc = _codec.encode_gop(chunk, "rgb")
+                path = os.path.join(pdir, f"{i}.tvc")
+                data = _codec.serialize_gop(enc)
+                with open(path, "wb") as f:
+                    f.write(data)
+                self.catalog.add_gop(
+                    pid, i, start, enc.num_frames, len(data), path,
+                    lru_seq=tick,
+                )
+        return pid
+
+    def _measure_step_mse(
+        self, parent: PhysicalMeta, frames, encoded, out_codec, resolution,
+        roi,
+    ) -> float:
+        """Exact step error on a sample (§3.2 'periodically samples...')."""
+        if frames is None:
+            # pass-through result: no pixels were materialized; use the
+            # predicted (MBPP-style) compression estimate instead
+            comp_mse = self.quality.compression_mse(out_codec)
+        elif encoded is not None:
+            n = min(4, frames.shape[0])
+            sample = frames[:n]
+            decoded = _codec.decode_gop(encoded[0], use_pallas=self.use_pallas)
+            sample_rt = decoded[:n]
+            comp_mse = exact_mse(sample_rt, sample)
+            self.quality.observe_compression(out_codec, comp_mse)
+        else:
+            comp_mse = 0.0
+        scale_to = resolution[0] / max(roi[2] - roi[0], 1)
+        res_mse = self.quality.resample_mse(parent.scale, scale_to)
+        return res_mse + comp_mse
+
+    # ------------------------------------------------------------------
+    # misc
+    # ------------------------------------------------------------------
+    def stats(self, name: str) -> Dict:
+        physicals = self.catalog.physicals_for(name)
+        return {
+            "physical_videos": len(physicals),
+            "gops": sum(
+                len(self.catalog.gops_for(p.physical_id)) for p in physicals
+            ),
+            "bytes": self.catalog.total_bytes(name),
+            "budget": self.catalog.get_budget(name),
+        }
+
+    def close(self):
+        self.deferred.stop_background()
+        self.catalog.close()
+
+
+class VSSWriter:
+    """Streaming, non-blocking writer: flushed GOPs are queryable."""
+
+    def __init__(self, store: VSS, name: str, *, fps, codec, gop_frames,
+                 budget_bytes, t_start):
+        self.store = store
+        self.name = name
+        self.fps = fps
+        self.codec = codec
+        self.gop_frames = gop_frames
+        self.budget_bytes = budget_bytes
+        self._buf: List[np.ndarray] = []
+        self._buffered = 0
+        self._next_frame = 0
+        self._next_idx = 0
+        self._pid: Optional[int] = None
+        self._dir: Optional[str] = None
+        self._bytes_written = 0
+        self._t_start = t_start
+        self._closed = False
+
+    def _ensure_physical(self, frame_shape) -> None:
+        if self._pid is not None:
+            return
+        h, w, c = frame_shape
+        roi = full_roi(w, h)
+        self._pid = self.store.catalog.add_physical(
+            self.name, w, h, self.fps, self.codec, roi,
+            self._t_start, self._t_start, mse_bound=0.0,
+            parent_is_original=True, is_original=True,
+        )
+        self.store.catalog.set_original(self.name, self._pid)
+        self._dir = os.path.join(self.store.root, self.name, str(self._pid))
+        os.makedirs(self._dir, exist_ok=True)
+        if self.gop_frames is None:
+            self.gop_frames = (
+                _codec.gop.frames_per_uncompressed_gop((h, w, c))
+                if self.codec == "rgb"
+                else _codec.gop.DEFAULT_COMPRESSED_GOP_FRAMES
+            )
+
+    def append(self, frames: np.ndarray) -> None:
+        if self._closed:
+            raise RuntimeError("writer closed")
+        frames = np.asarray(frames, np.uint8)
+        self._ensure_physical(frames.shape[1:])
+        self._buf.append(frames)
+        self._buffered += frames.shape[0]
+        while self._buffered >= self.gop_frames:
+            chunk = np.concatenate(self._buf, axis=0)
+            self._flush_gop(chunk[: self.gop_frames])
+            rest = chunk[self.gop_frames :]
+            self._buf = [rest] if rest.shape[0] else []
+            self._buffered = rest.shape[0]
+
+    def _flush_gop(self, chunk: np.ndarray) -> None:
+        enc = _codec.encode_gop(chunk, self.codec,
+                                use_pallas=self.store.use_pallas)
+        path = os.path.join(self._dir, f"{self._next_idx}.tvc")
+        data = _codec.serialize_gop(enc)
+        with open(path, "wb") as f:
+            f.write(data)
+        tick = self.store.catalog.lru_clock()
+        self.store.catalog.add_gop(
+            self._pid, self._next_idx, self._next_frame, chunk.shape[0],
+            len(data), path, lru_seq=tick,
+        )
+        self._next_idx += 1
+        self._next_frame += chunk.shape[0]
+        self._bytes_written += len(data)
+        # prefix becomes queryable immediately (§2 streaming writes)
+        self.store.catalog.extend_physical_time(
+            self._pid, self._t_start + self._next_frame / self.fps
+        )
+
+    def close(self) -> PhysicalMeta:
+        if self._buffered:
+            chunk = np.concatenate(self._buf, axis=0)
+            self._flush_gop(chunk)
+            self._buf, self._buffered = [], 0
+        self._closed = True
+        budget = self.budget_bytes or int(
+            self.store.budget_multiple * max(self._bytes_written, 1)
+        )
+        self.store.catalog.set_budget(self.name, budget)
+        return self.store.catalog.get_physical(self._pid)
+
+
+def resample(frames: np.ndarray, resolution: Tuple[int, int]) -> np.ndarray:
+    """Resize (T, H, W, C) uint8 frames to (width, height)."""
+    w, h = resolution
+    t, ih, iw, c = frames.shape
+    if (iw, ih) == (w, h):
+        return frames
+    if ih % h == 0 and iw % w == 0 and ih // h == iw // w:
+        f = ih // h  # integer box downsample (matches the codec kernel)
+        x = frames.astype(np.float32).reshape(t, h, f, w, f, c).mean((2, 4))
+        return np.clip(np.round(x), 0, 255).astype(np.uint8)
+    out = jax.image.resize(
+        jnp.asarray(frames, jnp.float32), (t, h, w, c), method="bilinear"
+    )
+    return np.asarray(jnp.clip(jnp.round(out), 0, 255), np.uint8)

@@ -1,0 +1,1 @@
+from repro.data.video import synthesize_road, synthesize_overlapping_pair  # noqa: F401

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for VSS hot-spots.
+
+Each kernel module hosts the pl.pallas_call + BlockSpec implementation;
+`ops.py` holds the public jit'd wrappers (padding/layout/dispatch) and
+`ref.py` the pure-jnp oracles that define semantics.
+"""
+from repro.kernels import ops, ref  # noqa: F401

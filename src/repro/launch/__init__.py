@@ -1,0 +1,1 @@
+"""Production mesh, multi-pod dry-run, roofline extraction, train driver."""

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init). Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.jsonl
+
+Each cell: build the production mesh, lower the right step program with
+sharded ShapeDtypeStruct inputs (zero allocation), ``.compile()``, then
+record memory_analysis / cost_analysis / the collective schedule parsed
+from the optimized HLO — the inputs to EXPERIMENTS.md §Dry-run/§Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, shapes_for
+from repro.launch import hlo_analysis as HA
+from repro.launch import roofline as RF
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    batch_shardings,
+    batch_specs,
+    cache_shardings,
+    cache_specs,
+    sharded_bytes,
+    state_shardings,
+)
+from repro.launch.steps import (
+    TrainHyper,
+    abstract_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models import model as M
+from repro.models.sharding import ShardCtx, param_shardings
+
+
+def default_microbatches(shape, dp_size: int) -> int:
+    """One sequence per data shard per microbatch (memory-safest)."""
+    return max(1, shape.global_batch // dp_size)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    num_microbatches: Optional[int] = None,
+    compress_grads: bool = False,
+    bf16_weights: bool = False,
+    shard_grad_accum: bool = False,
+    constrain_scanned_params: bool = False,
+    bf16_params: bool = False,
+    kv_int8: bool = False,
+    sp_carry: bool = False,
+    remat_policy: str = "none",
+    extra_tag: str = "",
+):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = ShardCtx(mesh, bf16_weights=bf16_weights,
+                   constrain_scanned_params=constrain_scanned_params,
+                   sp_carry=sp_carry, remat_policy=remat_policy)
+    chips = int(np.prod(mesh.devices.shape))
+    dp_size = ctx.dp_size
+
+    if shape.kind == "train":
+        n_micro = num_microbatches or default_microbatches(shape, dp_size)
+        hyper = TrainHyper(
+            num_microbatches=n_micro, compress_grads=compress_grads,
+            shard_grad_accum=shard_grad_accum, bf16_params=bf16_params,
+        )
+        state = abstract_train_state(cfg, hyper)
+        st_sh = state_shardings(state, mesh)
+        batch = batch_specs(cfg, shape)
+        b_sh = batch_shardings(batch, mesh)
+        step = make_train_step(cfg, ctx, hyper)
+        jitted = jax.jit(
+            step,
+            in_shardings=(st_sh, b_sh),
+            out_shardings=(st_sh, None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state, batch)
+        resident = sharded_bytes(state, st_sh, mesh)
+        params_tree = state["params"]
+    else:
+        params = M.init_model_abstract(cfg)
+        if bf16_params:  # serving weights are bf16 in production
+            params = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape,
+                    jax.numpy.bfloat16
+                    if s.dtype == jax.numpy.float32 else s.dtype,
+                ),
+                params,
+            )
+        p_sh = param_shardings(params, mesh)
+        batch = batch_specs(cfg, shape)
+        b_sh = batch_shardings(batch, mesh)
+        cache = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                            kv_int8=kv_int8)
+        c_sh = cache_shardings(cache, mesh)
+        if shape.kind == "prefill":
+            step = make_prefill_step(cfg, ctx)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, b_sh, c_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params, batch, cache)
+        else:
+            step = make_decode_step(cfg, ctx)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, b_sh["tokens"]),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params, cache, batch["tokens"])
+        resident = sharded_bytes(params, p_sh, mesh) + sharded_bytes(
+            cache, c_sh, mesh
+        )
+        params_tree = params
+        n_micro = 0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+
+    # --- analyses -----------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        mem_dict = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        } if mem is not None else {}
+    except Exception:
+        mem_dict = {}
+    try:
+        cost = compiled.cost_analysis() or {}
+    except Exception:
+        cost = {}
+    text = compiled.as_text()
+    # cost_analysis() counts while bodies once (no trip counts) — rebuild
+    # all three terms from the partitioned HLO with loop weighting.
+    stats = HA.analyze(text)
+    mflops = RF.model_flops(cfg, params_tree, shape, shape.kind)
+    roof = RF.Roofline(
+        flops_per_chip=stats.flops,
+        hbm_bytes_per_chip=stats.hbm_bytes,
+        ici_bytes_per_chip=stats.wire_bytes,
+        model_flops_total=mflops,
+        chips=chips,
+    )
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "tag": extra_tag,
+        "chips": chips,
+        "num_microbatches": n_micro,
+        "compile_s": round(compile_s, 2),
+        "resident_bytes_per_chip": resident,  # sharded_bytes is per-chip
+        "memory_analysis": mem_dict,
+        "xla_cost_flops_unweighted": float(cost.get("flops", 0.0)),
+        "collectives": stats.collective_ops,
+        "roofline": roof.as_dict(),
+        "params_total": RF.count_params(params_tree),
+        "params_active": RF.active_params(cfg, params_tree),
+        "hlo_lines": text.count("\n"),
+    }
+
+
+def cells(archs=None, shapes=None, meshes=("single", "multi")):
+    for arch in archs or ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            if shapes and shape.name not in shapes:
+                continue
+            for mesh in meshes:
+                yield arch, shape.name, mesh == "multi"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--bf16-weights", action="store_true")
+    ap.add_argument("--shard-grad-accum", action="store_true")
+    ap.add_argument("--constrain-scanned-params", action="store_true")
+    ap.add_argument("--bf16-params", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--sp-carry", action="store_true")
+    ap.add_argument("--remat-policy", default="none",
+                    choices=["none", "save_tp"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--keep-going", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else None
+    shapes = [args.shape] if args.shape else None
+    meshes = (args.mesh,) if args.mesh else ("single", "multi")
+
+    n_ok = n_fail = 0
+    for arch, shape, multi in cells(archs, shapes, meshes):
+        label = f"{arch} × {shape} × {'multi' if multi else 'single'}"
+        try:
+            rec = lower_cell(
+                arch, shape, multi,
+                num_microbatches=args.microbatches,
+                compress_grads=args.compress_grads,
+                bf16_weights=args.bf16_weights,
+                shard_grad_accum=args.shard_grad_accum,
+                constrain_scanned_params=args.constrain_scanned_params,
+                bf16_params=args.bf16_params,
+                kv_int8=args.kv_int8,
+                sp_carry=args.sp_carry,
+                remat_policy=args.remat_policy,
+                extra_tag=args.tag,
+            )
+            r = rec["roofline"]
+            print(
+                f"OK   {label}: compile={rec['compile_s']}s "
+                f"resident/chip={rec['resident_bytes_per_chip']/2**30:.2f}GiB "
+                f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                f"collective={r['collective_s']:.4f}s → {r['dominant']}"
+                f" (roofline {r['roofline_fraction']*100:.1f}%)",
+                flush=True,
+            )
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+            n_ok += 1
+        except Exception as e:
+            n_fail += 1
+            print(f"FAIL {label}: {type(e).__name__}: {e}", flush=True)
+            if not args.keep_going:
+                traceback.print_exc()
+                raise SystemExit(1)
+    print(f"\n{n_ok} cells OK, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,404 @@
+"""Static analysis of optimized (post-SPMD) HLO text.
+
+XLA's CPU ``cost_analysis()`` counts while-loop bodies ONCE, ignoring
+trip counts — useless for scanned programs (microbatch × layer-group
+scans hide ~99% of the work). This module re-derives the three roofline
+inputs directly from the compiled per-chip HLO:
+
+  * **flops**: every ``dot`` — 2 × |output| × contracted-extent — with
+    operand shapes resolved from a per-computation symbol table, weighted
+    by the product of enclosing while-loop trip counts (parsed from the
+    loop-condition's comparison constant).
+  * **hbm bytes**: per instruction at fusion boundaries (fusion bodies
+    stay in registers/VMEM): Σ operand bytes + output bytes, same loop
+    weighting. This is a *traffic model* — closer to real HBM movement
+    than XLA's per-op "bytes accessed" which double-counts fused regions.
+  * **collective wire bytes**: per collective op, tensor bytes × the
+    standard ring factor for its participant count, same loop weighting.
+
+All quantities are per-chip (the HLO is the per-chip SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "u1": 1, "s1": 1,
+}
+
+_ARRAY_RE = re.compile(r"(pred|[su]\d+|bf16|f16|f32|f64|c64|c128|token)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\((.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALL_EDGE_RES = (
+    re.compile(r"calls=%?([\w\.\-]+)"),
+    re.compile(r"to_apply=%?([\w\.\-]+)"),
+)
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def shape_bytes(type_str: str) -> int:
+    return sum(
+        _numel(d) * _DTYPE_BYTES[t] for t, d in _ARRAY_RE.findall(type_str)
+    )
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # everything after the opening paren
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr]
+    symbols: Dict[str, str]  # instr name -> type string
+    producers: Dict[str, "Instr"] = dataclasses.field(default_factory=dict)
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h:
+            cur = Computation(h.group(2), bool(h.group(1)), [], {})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        # strip metadata (contains braces/parens that confuse parsing)
+        body = line.split(", metadata=")[0]
+        m = _INSTR_RE.match(body)
+        if not m:
+            continue
+        ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4), body)
+        cur.instrs.append(ins)
+        cur.symbols[ins.name] = ins.type_str
+        cur.producers[ins.name] = ins
+    return comps
+
+
+_PASSTHRU_OPS = {
+    "convert", "copy", "bitcast", "transpose", "reshape", "broadcast",
+    "all-gather", "slice", "dynamic-slice",
+}
+
+
+def _numel_of(type_str: str) -> int:
+    m = _ARRAY_RE.search(type_str)
+    return _numel(m.group(2)) if m else 0
+
+
+def bf16_origin(comp: Computation, name: str, numel: int, depth: int = 6
+                ) -> bool:
+    """Does this value originate from a bf16 tensor of comparable size?
+
+    The CPU backend's float-normalization pass upcasts every bf16 op to
+    f32, so the compiled-for-CPU HLO moves f32 where the TPU target
+    would move bf16. Collectives/operands whose producer chain starts at
+    a bf16 tensor are therefore accounted at bf16 width (§Roofline's
+    TPU-adjusted byte counts).
+    """
+    for _ in range(depth):
+        ins = comp.producers.get(name)
+        if ins is None:
+            return False
+        if ins.type_str.startswith("bf16"):
+            return True
+        if ins.opcode in _PASSTHRU_OPS:
+            ops = _OPERAND_RE.findall(ins.rest)
+            if not ops:
+                return False
+            name = ops[0]
+            continue
+        if ins.opcode == "fusion":
+            # elementwise/convert fusions: a same-numel bf16 input means
+            # the value is a widened bf16 tensor
+            for o in _OPERAND_RE.findall(ins.rest):
+                t = comp.symbols.get(o)
+                if t and t.startswith("bf16") and _numel_of(t) == numel:
+                    return True
+            # follow the largest same-numel operand
+            cands = [
+                o for o in _OPERAND_RE.findall(ins.rest)
+                if _numel_of(comp.symbols.get(o, "")) == numel
+            ]
+            if not cands:
+                return False
+            name = cands[0]
+            continue
+        return False
+    return False
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition (iv < N pattern)."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.match(r"([\d]+)", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _edges(comps: Dict[str, Computation]):
+    """comp -> [(child, weight, via_fusion)]."""
+    out: Dict[str, List[Tuple[str, float, bool]]] = {c: [] for c in comps}
+    for c in comps.values():
+        for ins in c.instrs:
+            w = _WHILE_RE.search(ins.line)
+            if ins.opcode == "while" and w:
+                cond, body = w.group(1), w.group(2)
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                out[c.name].append((body, float(trips), False))
+                out[c.name].append((cond, float(trips), False))
+                continue
+            b = _BRANCH_RE.search(ins.line)
+            if b:
+                for name in b.group(1).split(","):
+                    name = name.strip().lstrip("%")
+                    if name in comps:
+                        out[c.name].append((name, 1.0, False))
+            for rx in _CALL_EDGE_RES:
+                mm = rx.search(ins.line)
+                if mm and mm.group(1) in comps:
+                    via_fusion = ins.opcode == "fusion"
+                    out[c.name].append((mm.group(1), 1.0, via_fusion))
+    return out
+
+
+def _multipliers(comps, edges):
+    """(multiplier, reached_via_fusion) per computation, from ENTRY.
+
+    Multipliers *sum* over call sites (a computation invoked from two
+    places runs for both), computed in topological order over the call
+    DAG (Kahn); `fused` marks bodies reached through a fusion op — their
+    instructions live in registers/VMEM, not HBM.
+    """
+    entry = next(c.name for c in comps.values() if c.is_entry)
+    indeg: Dict[str, int] = {c: 0 for c in comps}
+    for parent, outs in edges.items():
+        for child, _, _ in outs:
+            indeg[child] += 1
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    fused: Dict[str, bool] = {c: False for c in comps}
+    mult[entry] = 1.0
+    queue = [c for c, d in indeg.items() if d == 0]
+    seen = 0
+    while queue:
+        parent = queue.pop()
+        seen += 1
+        for child, w, via_fusion in edges[parent]:
+            mult[child] += mult[parent] * w
+            if via_fusion or fused[parent]:
+                fused[child] = True
+            indeg[child] -= 1
+            if indeg[child] == 0:
+                queue.append(child)
+    if seen < len(comps):  # cycle fallback: max-fixpoint
+        for _ in range(len(comps)):
+            changed = False
+            for parent, outs in edges.items():
+                for child, w, via_fusion in outs:
+                    nv = mult[parent] * w
+                    if nv > mult[child]:
+                        mult[child] = nv
+                        changed = True
+            if not changed:
+                break
+    return mult, fused
+
+
+_SKIP_HBM = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float  # per-chip, loop-weighted
+    hbm_bytes: float  # per-chip traffic model
+    wire_bytes: float  # per-chip collective bytes (ring factors applied)
+    collective_ops: Dict[str, int]
+    dot_count: int
+    while_trips: Dict[str, float]
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "collective_ops": self.collective_ops,
+            "dot_count": self.dot_count,
+        }
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        return max(len([x for x in first.split(",") if x.strip()]), 1)
+    return 1
+
+
+_RING = {
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1) / n,  # applied to the FULL input
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def analyze(text: str) -> HloStats:
+    comps = parse_computations(text)
+    edges = _edges(comps)
+    mult, fused = _multipliers(comps, edges)
+
+    flops = 0.0
+    hbm = 0.0
+    wire = 0.0
+    coll_ops: Dict[str, int] = {}
+    dot_count = 0
+    trips: Dict[str, float] = {}
+
+    for c in comps.values():
+        m = mult[c.name]
+        if m == 0.0:
+            continue
+        for ins in c.instrs:
+            op = ins.opcode
+            if op == "while":
+                w = _WHILE_RE.search(ins.line)
+                if w:
+                    trips[w.group(2)] = mult.get(w.group(2), 0.0)
+            # ---- flops (dots only; elementwise is noise at model scale)
+            if op in ("dot", "convolution"):
+                out_elems = _numel(_ARRAY_RE.search(ins.type_str).group(2))
+                contracted = 1
+                dims = _DIMS_RE.search(ins.line)
+                ops = _OPERAND_RE.findall(ins.rest.split(")")[0])
+                if dims and ops:
+                    lhs_t = c.symbols.get(ops[0])
+                    lhs_dims = _shape_dims(lhs_t) if lhs_t else None
+                    if lhs_dims:
+                        for d in dims.group(1).split(","):
+                            if d:
+                                contracted *= lhs_dims[int(d)]
+                flops += m * 2.0 * out_elems * contracted
+                dot_count += 1
+            # ---- collectives
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVES:
+                n = _group_size(ins.line)
+                nbytes = shape_bytes(ins.type_str)
+                if op.endswith("-start"):
+                    nbytes /= 2  # lhs tuple repeats operand+result
+                if base == "reduce-scatter":
+                    # lhs is the scattered output: input = out × n
+                    nbytes *= n
+                # TPU-adjust: CPU float normalization upcast bf16→f32;
+                # wire width on the TPU target follows the origin dtype
+                ops_ = _OPERAND_RE.findall(ins.rest)
+                if ops_ and ins.type_str.startswith("f32"):
+                    o_numel = _numel_of(c.symbols.get(ops_[0], ""))
+                    if bf16_origin(c, ops_[0], o_numel):
+                        nbytes /= 2
+                coll_ops[base] = coll_ops.get(base, 0) + int(m)
+                if n > 1:
+                    wire += m * nbytes * _RING[base](n)
+                continue
+            # ---- hbm traffic (fusion boundaries only)
+            if fused[c.name] or op in _SKIP_HBM or op.endswith("-done"):
+                continue
+            # In-place aliasing: an operand with *exactly* the output type
+            # (scan carries, dynamic-update-slice fusions, while tuples) is
+            # updated in place — the real traffic is the update slice, not
+            # the whole buffer. Count neither the aliased operand nor the
+            # output; remaining operands (the slice, indices) are counted.
+            #
+            # Indexed access: kLoop/kOutput fusions (and bare dynamic-slice
+            # / gather) touch ~output-sized regions of each operand, not
+            # the whole buffer (fused dynamic-slices over scan xs would
+            # otherwise count the full sequence buffer every step). kInput
+            # fusions are reductions and genuinely stream their operands.
+            out_t = ins.type_str
+            out_b = shape_bytes(out_t)
+            operand_types = [
+                c.symbols[o]
+                for o in _OPERAND_RE.findall(ins.rest)
+                if o in c.symbols
+            ]
+            cap = None
+            if op in ("dynamic-slice", "gather"):
+                cap = max(out_b, 256)
+            elif op == "fusion" and "kind=kInput" not in ins.line:
+                cap = max(4 * out_b, 16384)
+            operand_names = [
+                o for o in _OPERAND_RE.findall(ins.rest) if o in c.symbols
+            ]
+            aliased = False
+            nbytes = 0
+            for oname, t in zip(operand_names, operand_types):
+                if not aliased and t == out_t:
+                    aliased = True
+                    continue
+                b = shape_bytes(t)
+                if t.startswith("f32") and bf16_origin(
+                    c, oname, _numel_of(t)
+                ):
+                    b /= 2  # TPU-adjust (see collective branch)
+                nbytes += min(b, cap) if cap is not None else b
+            if not aliased:
+                b = out_b
+                if out_t.startswith("f32") and bf16_origin(
+                    c, ins.name, _numel_of(out_t)
+                ):
+                    b /= 2
+                nbytes += b
+            hbm += m * nbytes
+    return HloStats(flops, hbm, wire, coll_ops, dot_count, trips)

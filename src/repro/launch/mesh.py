@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) over ("data", "model") — 256 chips (one v5e pod).
+Multi-pod:  (2, 16, 16) over ("pod", "data", "model") — 512 chips.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax
+import and only then calls these.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1×1 mesh over whatever single device exists (tests/benches)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,220 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Targets TPU v5e:
+  peak bf16 compute   197 TFLOP/s / chip
+  HBM bandwidth       819 GB/s / chip
+  ICI bandwidth       ~50 GB/s / chip (1 link, conservative)
+
+``compiled.cost_analysis()`` on the 512-device SPMD executable reports
+*per-device* FLOPs and bytes (the HLO is the per-device program), so the
+three terms are computed per chip directly:
+
+  compute_term    = flops_per_chip / peak
+  memory_term     = hbm_bytes_per_chip / hbm_bw
+  collective_term = ici_bytes_per_chip / ici_bw
+
+Collective bytes are not in cost_analysis; we parse the optimized HLO
+and, per collective op, charge per-chip wire traffic with the standard
+ring factors (N = participants along the op's axis):
+  all-gather       out_bytes × (N−1)/N
+  reduce-scatter   in_bytes  × (N−1)/N
+  all-reduce       2 × bytes × (N−1)/N
+  all-to-all       bytes × (N−1)/N
+  collective-permute  bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[su]\d+|bf16|f16|f32|f64)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        ids = [x for x in first.split(",") if x.strip()]
+        return max(len(ids), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: Dict[str, int]  # op kind -> count
+    wire_bytes: float  # per-chip effective bytes on ICI
+    raw_bytes: float  # per-chip tensor bytes moved (no ring factors)
+
+    def as_dict(self):
+        return {
+            "ops": self.ops,
+            "wire_bytes": self.wire_bytes,
+            "raw_bytes": self.raw_bytes,
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    ops: Dict[str, int] = {}
+    wire = 0.0
+    raw = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        lhs_type, kind, start = m.group(1), m.group(2), m.group(3)
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        n = _group_size(line)
+        if n <= 1:
+            ops[kind] = ops.get(kind, 0) + 1
+            continue  # single-participant: no wire traffic
+        nbytes = _shape_bytes(lhs_type)
+        if start:
+            # '-start' lhs is a tuple (operand, result[, scratch]);
+            # halve to approximate the result buffer alone
+            nbytes = nbytes / 2
+        factor = {
+            "all-gather": (n - 1) / n,
+            "reduce-scatter": (n - 1),  # lhs is the *scattered* output
+            "all-reduce": 2 * (n - 1) / n,
+            "all-to-all": (n - 1) / n,
+            "collective-permute": 1.0,
+        }[kind]
+        ops[kind] = ops.get(kind, 0) + 1
+        wire += nbytes * factor
+        raw += nbytes
+    return CollectiveStats(ops, wire, raw)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    ici_bytes_per_chip: float
+    model_flops_total: float  # 6·N·D (train) / 2·N_active·tokens (serve)
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.ici_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS — how much compiled compute is useful."""
+        hlo_total = self.flops_per_chip * self.chips
+        return self.model_flops_total / max(hlo_total, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs time at peak / achievable step time (≈ MFU bound)."""
+        ideal_s = self.model_flops_total / (self.chips * PEAK_FLOPS)
+        return ideal_s / max(self.bound_s, 1e-30)
+
+    def as_dict(self):
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "ici_bytes_per_chip": self.ici_bytes_per_chip,
+            "model_flops_total": self.model_flops_total,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE)
+# ---------------------------------------------------------------------------
+
+def count_params(tree) -> int:
+    import jax
+
+    return sum(
+        int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def active_params(cfg, params_tree) -> int:
+    """Active parameter count: routed experts scaled by top_k/num_experts."""
+    import jax
+
+    n = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree)[0]:
+        size = int(np.prod(leaf.shape))
+        keys = [str(p.key) for p in path if hasattr(p, "key")]
+        if cfg.moe is not None and any(k.startswith("we_") for k in keys):
+            size = int(size * cfg.moe.top_k / cfg.moe.num_experts)
+        n += size
+    return n
+
+
+def model_flops(cfg, params_tree, shape, kind: str) -> float:
+    """Total useful FLOPs of one step."""
+    n_active = active_params(cfg, params_tree)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,166 @@
+"""ShapeDtypeStruct stand-ins + NamedShardings for every lowered input.
+
+``input_specs(cfg, shape)`` builds the batch for a shape cell;
+``*_shardings`` map every pytree (params / optimizer state / batch /
+decode cache) to NamedShardings on the production mesh. No device
+allocation happens anywhere in this module.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.mesh import data_axes
+from repro.models import model as M
+from repro.models.sharding import ShardCtx, param_shardings
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+        }
+    elif shape.kind == "prefill":
+        batch = {"tokens": sds((b, s), jnp.int32)}
+    else:  # decode: one new token against a seq_len cache
+        batch = {"tokens": sds((b, 1), jnp.int32)}
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            batch["frames"] = sds(
+                (b, cfg.num_frontend_tokens, cfg.frontend_dim), jnp.float32
+            )
+        if cfg.family == "vlm":
+            batch["patches"] = sds(
+                (b, cfg.num_frontend_tokens, cfg.frontend_dim), jnp.float32
+            )
+    return batch
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                kv_int8: bool = False):
+    return jax.eval_shape(
+        functools.partial(
+            M.init_cache, cfg=cfg, batch=batch, max_len=max_len,
+            kv_int8=kv_int8,
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def _fit_spec(ctx: ShardCtx, shape: Tuple[int, ...], spec: Tuple) -> P:
+    fixed = tuple(ctx._fit(d, s) for d, s in zip(shape, spec))
+    return P(*fixed)
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    ctx = ShardCtx(mesh)
+    dp = ctx.dp
+
+    def one(leaf):
+        spec = (dp,) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, _fit_spec(ctx, leaf.shape, spec))
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+_CACHE_RULES = (
+    # (name, rank) -> spec builder; dp = ("pod","data") or "data"
+    ("pos_abs", 2, lambda dp: (dp, None)),
+    ("pos", 1, lambda dp: (dp,)),
+    ("kscale", 3, lambda dp: (dp, "model", None)),
+    ("vscale", 3, lambda dp: (dp, "model", None)),
+    ("k", 4, lambda dp: (dp, "model", None, None)),  # KV len → SP over model
+    ("v", 4, lambda dp: (dp, "model", None, None)),
+    ("xk", 4, lambda dp: (dp, None, "model", None)),
+    ("xv", 4, lambda dp: (dp, None, "model", None)),
+    ("conv", 3, lambda dp: (dp, None, "model")),
+    ("h", 2, lambda dp: (dp, "model")),
+    ("C", 4, lambda dp: (dp, None, None, None)),
+    ("n", 3, lambda dp: (dp, None, None)),
+    ("m", 2, lambda dp: (dp, None)),
+    ("c", 2, lambda dp: (dp, "model")),
+)
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    ctx = ShardCtx(mesh)
+    dp = ctx.dp
+
+    def one(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        rank = len(leaf.shape)
+        stacked = any(
+            hasattr(p, "key") and str(p.key) == "groups" for p in path
+        )
+        base_rank = rank - 1 if stacked else rank
+        for n, r, f in _CACHE_RULES:
+            if name == n and base_rank == r:
+                spec = f(dp)
+                break
+        else:
+            spec = (dp,) + (None,) * (base_rank - 1) if base_rank else ()
+        if stacked:
+            spec = (None,) + tuple(spec)
+        return NamedSharding(mesh, _fit_spec(ctx, leaf.shape, spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def state_shardings(state_tree, mesh: Mesh):
+    """Shardings for the train state {params, opt{m,v,count}, ef?, step}."""
+    p_sh = param_shardings(state_tree["params"], mesh)
+    out = {"params": p_sh, "step": NamedSharding(mesh, P())}
+    out["opt"] = {
+        "m": p_sh,
+        "v": p_sh,
+        "count": NamedSharding(mesh, P()),
+    }
+    if "master" in state_tree["opt"]:
+        out["opt"]["master"] = p_sh
+    if "ef" in state_tree:
+        out["ef"] = p_sh
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analytic per-device byte estimate (CPU backend lacks memory_analysis)
+# ---------------------------------------------------------------------------
+
+def sharded_bytes(tree, shardings, mesh: Mesh) -> int:
+    """Σ leaf bytes / (product of mesh-axis sizes its spec uses)."""
+    total = 0
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    flat_sh = treedef.flatten_up_to(shardings)
+    for leaf, sh in zip(flat, flat_sh):
+        n = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        div = 1
+        for axes in sh.spec:
+            if axes is None:
+                continue
+            for a in axes if isinstance(axes, tuple) else (axes,):
+                div *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        total += n // div
+    return total

@@ -1,0 +1,1 @@
+"""Model zoo for the ten assigned architectures (pure-JAX, functional)."""

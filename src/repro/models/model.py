@@ -1,0 +1,847 @@
+"""Unified model assembly for the ten assigned architectures.
+
+One functional CausalLM covering every family via ``ArchConfig.pattern``:
+
+  attn    global self-attention + (gated) MLP            (dense archs)
+  local   windowed self-attention + MLP                  (recurrentgemma)
+  moe     global self-attention + MoE FFN                (deepseek, llama4)
+  rglru   RG-LRU temporal mix + MLP                      (recurrentgemma)
+  mlstm   xLSTM matrix-memory block (self-contained)     (xlstm)
+  slstm   xLSTM scalar-memory block (self-contained)     (xlstm)
+  xattn   gated cross-attention to image tokens + MLP    (llama-3.2-vision)
+  dec     causal self-attn + cross-attn to audio + MLP   (whisper decoder)
+  enc     bidirectional self-attn + MLP                  (whisper encoder)
+  dense0  layer-0 dense override in an MoE stack         (deepseek)
+
+Layers are stacked into *groups* (one group = one repetition of the
+pattern) and applied with ``lax.scan`` + ``jax.checkpoint`` so the 64-layer
+configs lower as one program with O(1) HLO size and a remat policy.
+
+Three entry points (the shapes lower exactly these):
+  ``forward``      train-time parallel pass → logits (+ MoE aux)
+  ``prefill``      parallel pass that also materializes the decode cache
+  ``decode_step``  one token against the cache (KV pages / ring / states)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import recurrent as R
+from repro.models.sharding import ShardCtx
+
+COMPUTE_DTYPE = jnp.bfloat16
+MAX_DECODER_POS = 32_768  # learned-pos archs (whisper) decode up to here
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    head: Tuple[str, ...]  # unscanned leading layers (e.g. deepseek dense0)
+    pattern: Tuple[str, ...]  # scanned group pattern
+    n_groups: int
+    tail: Tuple[str, ...]  # unscanned remainder layers
+
+
+def layer_plan(cfg: ArchConfig) -> LayerPlan:
+    head: Tuple[str, ...] = ()
+    n = cfg.num_layers
+    if cfg.first_dense_ff:
+        head = ("dense0",)
+        n -= 1
+    p = len(cfg.pattern)
+    n_groups = n // p
+    tail = tuple(cfg.pattern[: n - n_groups * p])
+    return LayerPlan(head, tuple(cfg.pattern), n_groups, tail)
+
+
+def _attn_cfg(cfg: ArchConfig, *, window=None, causal=True, use_rope=None):
+    return L.AttnCfg(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.hd,
+        qk_norm=cfg.qk_norm,
+        rope_theta=cfg.rope_theta,
+        window=window,
+        causal=causal,
+        use_rope=cfg.use_rope if use_rope is None else use_rope,
+        norm_type=cfg.norm_type,
+    )
+
+
+def _moe_cfg(cfg: ArchConfig) -> L.MoECfg:
+    m = cfg.moe
+    return L.MoECfg(
+        num_experts=m.num_experts,
+        top_k=m.top_k,
+        d_expert=m.d_expert,
+        num_shared=m.num_shared,
+        capacity_factor=m.capacity_factor,
+    )
+
+
+def _mlstm_cfg(cfg: ArchConfig) -> R.MLstmCfg:
+    return R.MLstmCfg(d_model=cfg.d_model, num_heads=cfg.mlstm_heads)
+
+
+def _slstm_cfg(cfg: ArchConfig) -> R.SLstmCfg:
+    return R.SLstmCfg(d_model=cfg.d_model, num_heads=cfg.mlstm_heads)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, typ: str, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    nt = cfg.norm_type
+    if typ in ("attn", "local", "enc", "dense0"):
+        ff = cfg.first_dense_ff if typ == "dense0" else cfg.d_ff
+        return {
+            "ln1": L.init_norm(ks[0], d, nt),
+            "attn": L.init_attn(ks[1], _attn_cfg(cfg)),
+            "ln2": L.init_norm(ks[2], d, nt),
+            "mlp": L.init_mlp(ks[3], d, ff, gated=cfg.gated_mlp),
+        }
+    if typ == "moe":
+        return {
+            "ln1": L.init_norm(ks[0], d, nt),
+            "attn": L.init_attn(ks[1], _attn_cfg(cfg)),
+            "ln2": L.init_norm(ks[2], d, nt),
+            "moe": L.init_moe(ks[3], d, _moe_cfg(cfg)),
+        }
+    if typ == "rglru":
+        return {
+            "ln1": L.init_norm(ks[0], d, nt),
+            "rec": R.init_rglru(ks[1], d, cfg.rnn_width or d),
+            "ln2": L.init_norm(ks[2], d, nt),
+            "mlp": L.init_mlp(ks[3], d, cfg.d_ff, gated=cfg.gated_mlp),
+        }
+    if typ == "mlstm":
+        return {
+            "ln1": L.init_norm(ks[0], d, nt),
+            "lstm": R.init_mlstm(ks[1], _mlstm_cfg(cfg)),
+        }
+    if typ == "slstm":
+        return {
+            "ln1": L.init_norm(ks[0], d, nt),
+            "lstm": R.init_slstm(ks[1], _slstm_cfg(cfg)),
+        }
+    if typ == "xattn":
+        return {
+            "ln1": L.init_norm(ks[0], d, nt),
+            "xattn": L.init_attn(ks[1], _attn_cfg(cfg, use_rope=False)),
+            "xgate": jnp.zeros((), jnp.float32),
+            "ln2": L.init_norm(ks[2], d, nt),
+            "mlp": L.init_mlp(ks[3], d, cfg.d_ff, gated=cfg.gated_mlp),
+            "mgate": jnp.zeros((), jnp.float32),
+        }
+    if typ == "dec":
+        return {
+            "ln1": L.init_norm(ks[0], d, nt),
+            "attn": L.init_attn(ks[1], _attn_cfg(cfg)),
+            "lnx": L.init_norm(ks[2], d, nt),
+            "xattn": L.init_attn(ks[3], _attn_cfg(cfg, use_rope=False)),
+            "ln2": L.init_norm(ks[4], d, nt),
+            "mlp": L.init_mlp(ks[5], d, cfg.d_ff, gated=cfg.gated_mlp),
+        }
+    raise ValueError(f"unknown layer type {typ!r}")
+
+
+def init_model(key, cfg: ArchConfig) -> Dict:
+    plan = layer_plan(cfg)
+    keys = iter(jax.random.split(key, 4096))
+    params: Dict[str, Any] = {}
+    params["embed"] = (
+        jax.random.normal(next(keys), (cfg.vocab_size, cfg.d_model),
+                          jnp.float32) * 0.02
+    )
+    if not cfg.use_rope and cfg.family == "audio":
+        params["pos_embed"] = (
+            jax.random.normal(next(keys), (MAX_DECODER_POS, cfg.d_model),
+                              jnp.float32) * 0.02
+        )
+    if cfg.frontend is not None:
+        params["frontend_proj"] = L.dense_init(
+            next(keys), (cfg.frontend_dim, cfg.d_model), cfg.frontend_dim
+        )
+    if cfg.encoder_layers:
+        enc_groups = [
+            {"0_enc": _init_layer(next(keys), "enc", cfg)}
+            for _ in range(cfg.encoder_layers)
+        ]
+        params["encoder"] = {
+            "groups": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *enc_groups
+            ),
+            "pos_embed": (
+                jax.random.normal(
+                    next(keys), (cfg.num_frontend_tokens, cfg.d_model),
+                    jnp.float32,
+                ) * 0.02
+            ),
+            "norm": L.init_norm(next(keys), cfg.d_model, cfg.norm_type),
+        }
+    for i, typ in enumerate(plan.head):
+        params[f"head_{i}_{typ}"] = _init_layer(next(keys), typ, cfg)
+    if plan.n_groups:
+        groups = []
+        for _ in range(plan.n_groups):
+            g = {
+                f"{i}_{typ}": _init_layer(next(keys), typ, cfg)
+                for i, typ in enumerate(plan.pattern)
+            }
+            groups.append(g)
+        params["groups"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *groups
+        )
+    for i, typ in enumerate(plan.tail):
+        params[f"tail_{i}_{typ}"] = _init_layer(next(keys), typ, cfg)
+    params["final_norm"] = L.init_norm(next(keys), cfg.d_model, cfg.norm_type)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            next(keys), (cfg.d_model, cfg.vocab_size), cfg.d_model
+        )
+    return params
+
+
+def init_model_abstract(cfg: ArchConfig):
+    """Shape-only init (no allocation) — used by the dry-run."""
+    return jax.eval_shape(
+        functools.partial(init_model, cfg=cfg), jax.random.key(0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# parallel (train / prefill) layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(
+    p: Dict, typ: str, x, cfg: ArchConfig, ctx: ShardCtx, positions,
+    memory=None,  # (B, T_mem, D) cross-attn memory (audio enc out / image)
+):
+    nt = cfg.norm_type
+    if typ in ("attn", "local", "moe", "enc", "dense0"):
+        acfg = _attn_cfg(
+            cfg,
+            window=cfg.local_window if typ == "local" else None,
+            causal=(typ != "enc"),
+        )
+        h = L.apply_norm(p["ln1"], x, nt)
+        x = x + L.self_attention_block(p["attn"], h, acfg, positions, ctx)
+        h = L.apply_norm(p["ln2"], x, nt)
+        if typ == "moe":
+            y, aux = L.moe_block(p["moe"], h, _moe_cfg(cfg), cfg.act, ctx)
+            return x + y, aux
+        return x + L.mlp_block(p["mlp"], h, cfg.act, ctx), 0.0
+    if typ == "rglru":
+        h = L.apply_norm(p["ln1"], x, nt)
+        x = x + R.rglru_block(p["rec"], h, ctx)
+        h = L.apply_norm(p["ln2"], x, nt)
+        return x + L.mlp_block(p["mlp"], h, cfg.act, ctx), 0.0
+    if typ == "mlstm":
+        h = L.apply_norm(p["ln1"], x, nt)
+        return x + R.mlstm_block(p["lstm"], h, _mlstm_cfg(cfg), ctx), 0.0
+    if typ == "slstm":
+        h = L.apply_norm(p["ln1"], x, nt)
+        return x + R.slstm_block(p["lstm"], h, _slstm_cfg(cfg), ctx), 0.0
+    if typ == "xattn":
+        h = L.apply_norm(p["ln1"], x, nt)
+        o = _cross_attention(p["xattn"], h, memory, cfg, ctx)
+        x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * o
+        h = L.apply_norm(p["ln2"], x, nt)
+        m = L.mlp_block(p["mlp"], h, cfg.act, ctx)
+        return x + jnp.tanh(p["mgate"]).astype(x.dtype) * m, 0.0
+    if typ == "dec":
+        acfg = _attn_cfg(cfg)
+        h = L.apply_norm(p["ln1"], x, nt)
+        x = x + L.self_attention_block(p["attn"], h, acfg, positions, ctx)
+        h = L.apply_norm(p["lnx"], x, nt)
+        x = x + _cross_attention(p["xattn"], h, memory, cfg, ctx)
+        h = L.apply_norm(p["ln2"], x, nt)
+        return x + L.mlp_block(p["mlp"], h, cfg.act, ctx), 0.0
+    raise ValueError(f"unknown layer type {typ!r}")
+
+
+def _cross_attention(p, x, memory, cfg: ArchConfig, ctx: ShardCtx):
+    """Cross-attention: queries from x, keys/values from memory."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", memory.astype(dt), p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", memory.astype(dt), p["wv"].astype(dt))
+    q = ctx.cs(q, ctx.dp, None, "model", None)
+    k = ctx.cs(k, ctx.dp, None, "model", None)
+    v = ctx.cs(v, ctx.dp, None, "model", None)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"])
+        k = L.rmsnorm(k, p["k_norm"])
+    o = L.attention(q, k, v, causal=False)
+    return L.attn_out(p, o, ctx)
+
+
+def _scan_groups(params, x, cfg, ctx, positions, memory, plan: LayerPlan):
+    """lax.scan over stacked groups with remat; returns (x, aux_sum)."""
+
+    from repro.models.sharding import constrain_group_params
+
+    def body(carry, g):
+        h, aux = carry
+        g = constrain_group_params(g, ctx)
+        for i, typ in enumerate(plan.pattern):
+            h, a = _apply_layer(
+                g[f"{i}_{typ}"], typ, h, cfg, ctx, positions, memory
+            )
+            aux = aux + a
+        h = ctx.cs(h, ctx.dp, ctx.act_seq, None)
+        return (h, aux), None
+
+    if ctx.remat_policy == "save_tp":
+        ckpt = functools.partial(
+            jax.checkpoint,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "tp_block_out"
+            ),
+        )
+    else:
+        ckpt = jax.checkpoint
+    (x, aux), _ = jax.lax.scan(
+        ckpt(body), (x, jnp.float32(0.0)), params["groups"]
+    )
+    return x, aux
+
+
+def _encode_audio(params, frames, cfg: ArchConfig, ctx: ShardCtx):
+    """Whisper encoder over stubbed frame embeddings (B, T, frontend_dim)."""
+    x = (frames.astype(COMPUTE_DTYPE)
+         @ params["frontend_proj"].astype(COMPUTE_DTYPE))
+    t = x.shape[1]
+    x = x + params["encoder"]["pos_embed"][:t].astype(x.dtype)[None]
+    x = ctx.cs(x, ctx.dp, None, None)
+    positions = jnp.arange(t)
+
+    def body(h, g):
+        h, _ = _apply_layer(g["0_enc"], "enc", h, cfg, ctx, positions)
+        return ctx.cs(h, ctx.dp, None, None), None
+
+    x, _ = jax.lax.scan(
+        jax.checkpoint(body), x, params["encoder"]["groups"]
+    )
+    return L.apply_norm(params["encoder"]["norm"], x, cfg.norm_type)
+
+
+def _embed_tokens(params, tokens, cfg: ArchConfig, ctx: ShardCtx):
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    return ctx.cs(x, ctx.dp, None, None)
+
+
+def _memory_for(params, cfg: ArchConfig, batch, ctx: ShardCtx):
+    """Cross-attention memory from the (stubbed) modality frontend."""
+    if cfg.family == "audio":
+        return _encode_audio(params, batch["frames"], cfg, ctx)
+    if cfg.family == "vlm":
+        m = (batch["patches"].astype(COMPUTE_DTYPE)
+             @ params["frontend_proj"].astype(COMPUTE_DTYPE))
+        return ctx.cs(m, ctx.dp, None, None)
+    return None
+
+
+def unembed(params, x, cfg: ArchConfig, ctx: ShardCtx):
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_type)
+    w = (params["embed"].astype(x.dtype).T if cfg.tie_embeddings
+         else params["lm_head"].astype(x.dtype))
+    logits = x @ w
+    return ctx.cs(logits, ctx.dp, None, "model")
+
+
+def cast_weights(params, ctx: ShardCtx):
+    """Pre-cast fp32 masters to bf16 at the *sharded* representation so
+    FSDP all-gathers move bf16, not f32 (ctx.bf16_weights). Norm scales
+    stay f32 (they are tiny and replicated)."""
+    if not ctx.bf16_weights:
+        return params
+
+    def one(path, leaf):
+        name = ""
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        if leaf.dtype != jnp.float32 or "norm" in name or name in (
+            "scale", "bias", "xgate", "mgate", "rg_a",
+        ):
+            return leaf
+        return leaf.astype(COMPUTE_DTYPE)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def forward(
+    params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray], ctx: ShardCtx
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Parallel pass. batch: tokens (B,S) [+ frames|patches].
+    Returns (logits (B,S,V) bf16, moe_aux scalar)."""
+    params = cast_weights(params, ctx)
+    plan = layer_plan(cfg)
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = _embed_tokens(params, tokens, cfg, ctx)
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][:s].astype(x.dtype)[None]
+    memory = _memory_for(params, cfg, batch, ctx)
+    positions = jnp.arange(s)
+    aux = jnp.float32(0.0)
+    for i, typ in enumerate(plan.head):
+        x, a = _apply_layer(
+            params[f"head_{i}_{typ}"], typ, x, cfg, ctx, positions, memory
+        )
+        aux += a
+    if plan.n_groups:
+        x, a = _scan_groups(params, x, cfg, ctx, positions, memory, plan)
+        aux += a
+    for i, typ in enumerate(plan.tail):
+        x, a = _apply_layer(
+            params[f"tail_{i}_{typ}"], typ, x, cfg, ctx, positions, memory
+        )
+        aux += a
+    return unembed(params, x, cfg, ctx), aux
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def loss_fn(params, cfg: ArchConfig, batch, ctx: ShardCtx):
+    """Causal-LM cross entropy (labels < 0 are masked) + MoE aux."""
+    logits, aux = forward(params, cfg, batch, ctx)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, lab[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    n_moe = sum(1 for t in cfg.layer_types() if t == "moe")
+    if n_moe:
+        loss = loss + MOE_AUX_WEIGHT * aux / n_moe
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# decode cache
+# ---------------------------------------------------------------------------
+
+def _layer_cache_spec(typ: str, cfg: ArchConfig, batch: int, max_len: int,
+                      kv_int8: bool = False):
+    """ShapeDtype spec (as zeros-builder) for one layer's decode state."""
+    hkv, hd = cfg.num_kv_heads, cfg.hd
+    if typ in ("attn", "moe", "dense0", "dec"):
+        shape = (batch, max_len, hkv, hd)
+        kv_dt = jnp.int8 if kv_int8 else COMPUTE_DTYPE
+        d = {"k": jnp.zeros(shape, kv_dt), "v": jnp.zeros(shape, kv_dt)}
+        if kv_int8:  # §4 multi-representation view: int8 KV + scales
+            d["kscale"] = jnp.zeros((batch, max_len, hkv), COMPUTE_DTYPE)
+            d["vscale"] = jnp.zeros((batch, max_len, hkv), COMPUTE_DTYPE)
+        if typ == "dec":  # cross-KV precomputed from encoder output
+            t = cfg.num_frontend_tokens
+            d["xk"] = jnp.zeros((batch, t, hkv, hd), COMPUTE_DTYPE)
+            d["xv"] = jnp.zeros((batch, t, hkv, hd), COMPUTE_DTYPE)
+        return d
+    if typ == "local":
+        w = min(cfg.local_window, max_len)
+        return {
+            "k": jnp.zeros((batch, w, hkv, hd), COMPUTE_DTYPE),
+            "v": jnp.zeros((batch, w, hkv, hd), COMPUTE_DTYPE),
+            "pos_abs": jnp.full((batch, w), -1, jnp.int32),
+        }
+    if typ == "xattn":
+        t = cfg.num_frontend_tokens
+        return {
+            "xk": jnp.zeros((batch, t, hkv, hd), COMPUTE_DTYPE),
+            "xv": jnp.zeros((batch, t, hkv, hd), COMPUTE_DTYPE),
+        }
+    if typ == "rglru":
+        w = cfg.rnn_width or cfg.d_model
+        return R.rglru_init_state(batch, w, dtype=COMPUTE_DTYPE)
+    if typ == "mlstm":
+        return R.mlstm_init_state(batch, _mlstm_cfg(cfg), dtype=COMPUTE_DTYPE)
+    if typ == "slstm":
+        return R.slstm_init_state(batch, _slstm_cfg(cfg))
+    raise ValueError(typ)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               kv_int8: bool = False) -> Dict:
+    plan = layer_plan(cfg)
+    cache: Dict[str, Any] = {}
+    for i, typ in enumerate(plan.head):
+        cache[f"head_{i}_{typ}"] = _layer_cache_spec(
+            typ, cfg, batch, max_len, kv_int8
+        )
+    if plan.n_groups:
+        one = {
+            f"{i}_{typ}": _layer_cache_spec(typ, cfg, batch, max_len,
+                                            kv_int8)
+            for i, typ in enumerate(plan.pattern)
+        }
+        cache["groups"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                x, (plan.n_groups,) + x.shape
+            ).copy() if hasattr(x, "shape") else x,
+            one,
+        )
+    for i, typ in enumerate(plan.tail):
+        cache[f"tail_{i}_{typ}"] = _layer_cache_spec(
+            typ, cfg, batch, max_len, kv_int8
+        )
+    cache["pos"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode-step layer application
+# ---------------------------------------------------------------------------
+
+def _decode_attention(q, k, v, valid_mask, k_scale=None, v_scale=None):
+    """q: (B,1,Hq,hd); k/v: (B,L,Hkv,hd); valid_mask: (B,L) bool.
+
+    Dots take the cache at its stored width (bf16 / int8 view) with f32
+    accumulation — the cache read is the decode roofline, so never widen
+    it before the dot. ``k_scale``/``v_scale``: (B, L, Hkv) dequant
+    scales for int8 KV views (§4's multi-representation cached views,
+    applied to KV pages).
+    """
+    b, _, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, hkv, g, hd)
+    if k.dtype == jnp.int8:
+        # int8 scores then per-position rescale; q stays bf16
+        s = jnp.einsum(
+            "bhgd,blhd->bhgl", qg.astype(jnp.bfloat16),
+            k.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+        s = s * jnp.moveaxis(k_scale, -1, 1).astype(jnp.float32)[:, :, None]
+    else:
+        s = jnp.einsum(
+            "bhgd,blhd->bhgl", qg, k, preferred_element_type=jnp.float32
+        )
+    s = s * scale
+    s = jnp.where(valid_mask[:, None, None, :], s, L.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if v.dtype == jnp.int8:
+        pv = p * jnp.moveaxis(v_scale, -1, 1).astype(jnp.float32)[:, :, None]
+        o = jnp.einsum(
+            "bhgl,blhd->bhgd", pv.astype(jnp.bfloat16),
+            v.astype(jnp.bfloat16), preferred_element_type=jnp.float32,
+        )
+    else:
+        o = jnp.einsum(
+            "bhgl,blhd->bhgd", p.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        )
+    return o.reshape(b, 1, hq, hd)
+
+
+def _quantize_kv(x):
+    """(… , Hkv, hd) → (int8 values, (…, Hkv) bf16 scales)."""
+    s = jnp.maximum(jnp.abs(x.astype(jnp.float32)).max(-1), 1e-6) / 127.0
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, s.astype(jnp.bfloat16)
+
+
+def _step_attn_common(p, h, cfg, pos, ctx):
+    """Project + rope the single new token. h: (B,1,D) → q,k,v (B,1,·,hd)."""
+    dt = h.dtype
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"])
+        k = L.rmsnorm(k, p["k_norm"])
+    if cfg.use_rope:
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k = L.rope(k, pos[:, None], cfg.rope_theta)
+    return q, k, v
+
+
+def _step_layer(
+    p: Dict, c: Dict, typ: str, x, cfg: ArchConfig, ctx: ShardCtx, pos,
+):
+    """One-token update. x: (B,1,D); pos: (B,) int32. Returns (x, cache')."""
+    nt = cfg.norm_type
+    b = x.shape[0]
+    bidx = jnp.arange(b)
+    if typ in ("attn", "moe", "dense0", "dec"):
+        h = L.apply_norm(p["ln1"], x, nt)
+        q, k, v = _step_attn_common(p["attn"], h, cfg, pos, ctx)
+        ksc = vsc = None
+        if "kscale" in c:  # int8 KV view
+            kq, ks = _quantize_kv(k[:, 0])
+            vq, vs = _quantize_kv(v[:, 0])
+            kc = c["k"].at[bidx, pos].set(kq)
+            vc = c["v"].at[bidx, pos].set(vq)
+            ksc = c["kscale"].at[bidx, pos].set(ks)
+            vsc = c["vscale"].at[bidx, pos].set(vs)
+            c = dict(c, kscale=ksc, vscale=vsc)
+        else:
+            kc = c["k"].at[bidx, pos].set(k[:, 0])
+            vc = c["v"].at[bidx, pos].set(v[:, 0])
+        kc = ctx.cs(kc, ctx.dp, "model", None, None)
+        vc = ctx.cs(vc, ctx.dp, "model", None, None)
+        lpos = jnp.arange(kc.shape[1])[None, :]
+        valid = lpos <= pos[:, None]
+        o = _decode_attention(q, kc, vc, valid, ksc, vsc)
+        x = x + L.attn_out(p["attn"], o.astype(x.dtype), ctx)
+        c = dict(c, k=kc, v=vc)
+        if typ == "dec":
+            h = L.apply_norm(p["lnx"], x, nt)
+            qx = jnp.einsum("bsd,dhk->bshk", h, p["xattn"]["wq"].astype(h.dtype))
+            tmem = c["xk"].shape[1]
+            ones = jnp.ones((b, tmem), bool)
+            ox = _decode_attention(qx, c["xk"], c["xv"], ones)
+            x = x + L.attn_out(p["xattn"], ox.astype(x.dtype), ctx)
+        h = L.apply_norm(p["ln2"], x, nt)
+        if typ == "moe":
+            y, _ = L.moe_block(p["moe"], h, _moe_cfg(cfg), cfg.act, ctx)
+            return x + y, c
+        return x + L.mlp_block(p["mlp"], h, cfg.act, ctx), c
+    if typ == "local":
+        h = L.apply_norm(p["ln1"], x, nt)
+        q, k, v = _step_attn_common(p["attn"], h, cfg, pos, ctx)
+        w = c["k"].shape[1]
+        slot = pos % w
+        kc = c["k"].at[bidx, slot].set(k[:, 0])
+        vc = c["v"].at[bidx, slot].set(v[:, 0])
+        pa = c["pos_abs"].at[bidx, slot].set(pos)
+        valid = (pa >= 0) & (pa <= pos[:, None]) & (
+            pa > pos[:, None] - cfg.local_window
+        )
+        o = _decode_attention(q, kc, vc, valid)
+        x = x + L.attn_out(p["attn"], o.astype(x.dtype), ctx)
+        h = L.apply_norm(p["ln2"], x, nt)
+        x = x + L.mlp_block(p["mlp"], h, cfg.act, ctx)
+        return x, dict(c, k=kc, v=vc, pos_abs=pa)
+    if typ == "xattn":
+        h = L.apply_norm(p["ln1"], x, nt)
+        qx = jnp.einsum("bsd,dhk->bshk", h, p["xattn"]["wq"].astype(h.dtype))
+        ones = jnp.ones((b, c["xk"].shape[1]), bool)
+        ox = _decode_attention(qx, c["xk"], c["xv"], ones)
+        o = L.attn_out(p["xattn"], ox.astype(x.dtype), ctx)
+        x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * o
+        h = L.apply_norm(p["ln2"], x, nt)
+        m = L.mlp_block(p["mlp"], h, cfg.act, ctx)
+        return x + jnp.tanh(p["mgate"]).astype(x.dtype) * m, c
+    if typ == "rglru":
+        h = L.apply_norm(p["ln1"], x, nt)
+        c2, o = R.rglru_block_step(p["rec"], c, h[:, 0], ctx)
+        x = x + o[:, None]
+        h = L.apply_norm(p["ln2"], x, nt)
+        return x + L.mlp_block(p["mlp"], h, cfg.act, ctx), c2
+    if typ == "mlstm":
+        h = L.apply_norm(p["ln1"], x, nt)
+        c2, o = R.mlstm_block_step(p["lstm"], c, h[:, 0], _mlstm_cfg(cfg), ctx)
+        return x + o[:, None], c2
+    if typ == "slstm":
+        h = L.apply_norm(p["ln1"], x, nt)
+        c2, o = R.slstm_block_step(p["lstm"], c, h[:, 0], _slstm_cfg(cfg), ctx)
+        return x + o[:, None], c2
+    raise ValueError(typ)
+
+
+def decode_step(
+    params, cfg: ArchConfig, cache: Dict, tokens: jnp.ndarray,
+    ctx: ShardCtx,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step. tokens: (B, 1) int32. Returns (logits (B,1,V), cache')."""
+    params = cast_weights(params, ctx)
+    plan = layer_plan(cfg)
+    pos = cache["pos"]
+    x = _embed_tokens(params, tokens, cfg, ctx)
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][pos][:, None].astype(x.dtype)
+    new_cache: Dict[str, Any] = {}
+    for i, typ in enumerate(plan.head):
+        key = f"head_{i}_{typ}"
+        x, new_cache[key] = _step_layer(
+            params[key], cache[key], typ, x, cfg, ctx, pos
+        )
+    if plan.n_groups:
+        def body(carry, xs):
+            h = carry
+            g, cg = xs
+            ncg = {}
+            for i, typ in enumerate(plan.pattern):
+                k = f"{i}_{typ}"
+                h, ncg[k] = _step_layer(g[k], cg[k], typ, h, cfg, ctx, pos)
+            return h, ncg
+
+        x, ncg = jax.lax.scan(body, x, (params["groups"], cache["groups"]))
+        new_cache["groups"] = ncg
+    for i, typ in enumerate(plan.tail):
+        key = f"tail_{i}_{typ}"
+        x, new_cache[key] = _step_layer(
+            params[key], cache[key], typ, x, cfg, ctx, pos
+        )
+    new_cache["pos"] = pos + 1
+    return unembed(params, x, cfg, ctx), new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: parallel pass that also fills the decode cache
+# ---------------------------------------------------------------------------
+
+def _prefill_layer(
+    p: Dict, c: Dict, typ: str, x, cfg: ArchConfig, ctx: ShardCtx,
+    positions, memory,
+):
+    """Parallel layer application that also fills this layer's cache."""
+    nt = cfg.norm_type
+    s = x.shape[1]
+    if typ in ("attn", "moe", "dense0", "dec", "local"):
+        window = cfg.local_window if typ == "local" else None
+        acfg = _attn_cfg(cfg, window=window)
+        h = L.apply_norm(p["ln1"], x, nt)
+        q, k, v = L.attn_qkv(p["attn"], h, acfg, positions, ctx)
+        o = L.attention(q, k, v, causal=True, window=window)
+        x = x + L.attn_out(p["attn"], o, ctx)
+        if typ == "local":
+            w = c["k"].shape[1]
+            take = min(s, w)
+            tpos = jnp.arange(s - take, s)
+            slots = tpos % w
+            kc = c["k"].at[:, slots].set(k[:, s - take:])
+            vc = c["v"].at[:, slots].set(v[:, s - take:])
+            pa = c["pos_abs"].at[:, slots].set(
+                jnp.broadcast_to(tpos, (x.shape[0], take))
+            )
+            c = dict(c, k=kc, v=vc, pos_abs=pa)
+        else:
+            if "kscale" in c:  # int8 KV view
+                kq, ks = _quantize_kv(k)
+                vq, vs = _quantize_kv(v)
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    c["k"], kq, 0, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    c["v"], vq, 0, axis=1)
+                c = dict(
+                    c,
+                    kscale=jax.lax.dynamic_update_slice_in_dim(
+                        c["kscale"], ks, 0, axis=1),
+                    vscale=jax.lax.dynamic_update_slice_in_dim(
+                        c["vscale"], vs, 0, axis=1),
+                )
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    c["k"], k, 0, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    c["v"], v, 0, axis=1)
+            kc = ctx.cs(kc, ctx.dp, "model", None, None)
+            vc = ctx.cs(vc, ctx.dp, "model", None, None)
+            c = dict(c, k=kc, v=vc)
+        if typ == "dec":
+            dt = x.dtype
+            xk = jnp.einsum(
+                "btd,dhk->bthk", memory.astype(dt),
+                p["xattn"]["wk"].astype(dt),
+            )
+            xv = jnp.einsum(
+                "btd,dhk->bthk", memory.astype(dt),
+                p["xattn"]["wv"].astype(dt),
+            )
+            h = L.apply_norm(p["lnx"], x, nt)
+            x = x + _cross_attention(p["xattn"], h, memory, cfg, ctx)
+            c = dict(c, xk=xk, xv=xv)
+        h = L.apply_norm(p["ln2"], x, nt)
+        if typ == "moe":
+            y, _ = L.moe_block(p["moe"], h, _moe_cfg(cfg), cfg.act, ctx)
+            return x + y, c
+        return x + L.mlp_block(p["mlp"], h, cfg.act, ctx), c
+    if typ == "xattn":
+        dt = x.dtype
+        xk = jnp.einsum("btd,dhk->bthk", memory.astype(dt),
+                        p["xattn"]["wk"].astype(dt))
+        xv = jnp.einsum("btd,dhk->bthk", memory.astype(dt),
+                        p["xattn"]["wv"].astype(dt))
+        x, _ = _apply_layer(p, typ, x, cfg, ctx, positions, memory)
+        return x, dict(c, xk=xk, xv=xv)
+    if typ == "rglru":
+        h = L.apply_norm(p["ln1"], x, nt)
+        o, state = R.rglru_block_prefill(p["rec"], h, ctx)
+        x = x + o
+        h = L.apply_norm(p["ln2"], x, nt)
+        return x + L.mlp_block(p["mlp"], h, cfg.act, ctx), state
+    if typ == "mlstm":
+        h = L.apply_norm(p["ln1"], x, nt)
+        o, state = R.mlstm_block_prefill(p["lstm"], h, _mlstm_cfg(cfg), ctx)
+        return x + o, state
+    if typ == "slstm":
+        h = L.apply_norm(p["ln1"], x, nt)
+        o, state = R.slstm_block_prefill(p["lstm"], h, _slstm_cfg(cfg), ctx)
+        return x + o, state
+    raise ValueError(typ)
+
+
+def prefill(
+    params, cfg: ArchConfig, batch: Dict, cache: Dict, ctx: ShardCtx,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Parallel prefill of `tokens` (B,S); fills cache, returns last-token
+    logits (B, 1, V) and the updated cache (pos = S)."""
+    params = cast_weights(params, ctx)
+    plan = layer_plan(cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed_tokens(params, tokens, cfg, ctx)
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][:s].astype(x.dtype)[None]
+    memory = _memory_for(params, cfg, batch, ctx)
+    positions = jnp.arange(s)
+    new_cache: Dict[str, Any] = {}
+    for i, typ in enumerate(plan.head):
+        key = f"head_{i}_{typ}"
+        x, new_cache[key] = _prefill_layer(
+            params[key], cache[key], typ, x, cfg, ctx, positions, memory
+        )
+    if plan.n_groups:
+        def body(h, xs):
+            g, cg = xs
+            ncg = {}
+            for i, typ in enumerate(plan.pattern):
+                k = f"{i}_{typ}"
+                h, ncg[k] = _prefill_layer(
+                    g[k], cg[k], typ, h, cfg, ctx, positions, memory
+                )
+            return ctx.cs(h, ctx.dp, None, None), ncg
+
+        x, ncg = jax.lax.scan(
+            jax.checkpoint(body), x, (params["groups"], cache["groups"])
+        )
+        new_cache["groups"] = ncg
+    for i, typ in enumerate(plan.tail):
+        key = f"tail_{i}_{typ}"
+        x, new_cache[key] = _prefill_layer(
+            params[key], cache[key], typ, x, cfg, ctx, positions, memory
+        )
+    new_cache["pos"] = jnp.full((b,), s, jnp.int32)
+    logits = unembed(params, x[:, -1:], cfg, ctx)
+    return logits, new_cache

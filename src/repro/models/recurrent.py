@@ -1,0 +1,467 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin), mLSTM & sLSTM (xLSTM).
+
+Training/prefill paths are parallel where the math allows (associative
+scan for RG-LRU, q-chunked gated-attention form for mLSTM) and an honest
+sequential ``lax.scan`` for sLSTM (which is inherently sequential — the
+paper says so). Decode paths are single-step state updates; states are
+small (vectors / one matrix per head) and shard over the "model" axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init
+from repro.models.sharding import ShardCtx
+
+RG_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+# ---------------------------------------------------------------------------
+# causal conv1d (width W, per-channel)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b):
+    """x: (B,S,D); w: (W,D); b: (D)."""
+    width = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + pads[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def conv1d_step(state, x_t, w, b):
+    """state: (B, W-1, D) previous inputs; x_t: (B, D)."""
+    width = w.shape[0]
+    window = jnp.concatenate([state, x_t[:, None]], axis=1)  # (B, W, D)
+    out = jnp.einsum("bwd,wd->bd", window, w.astype(x_t.dtype)) + b.astype(
+        x_t.dtype
+    )
+    return window[:, 1:], out
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin, arXiv:2402.19427)
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, d_model: int, width: int, conv_width: int = 4):
+    ks = jax.random.split(key, 8)
+    return {
+        "rg_in": dense_init(ks[0], (d_model, width), d_model),
+        "rg_gate": dense_init(ks[1], (d_model, width), d_model),
+        "rg_out": dense_init(ks[2], (width, d_model), width),
+        "rg_gi": dense_init(ks[3], (width, width), width),
+        "rg_gr": dense_init(ks[4], (width, width), width),
+        # Λ init so that a^c ∈ (0.9, 0.999) roughly
+        "rg_a": jnp.log(jnp.expm1(
+            jax.random.uniform(ks[5], (width,), jnp.float32, 0.3, 0.8)
+        )),
+        "conv_w": dense_init(ks[6], (conv_width, width), conv_width),
+        "conv_b": jnp.zeros((width,), jnp.float32),
+    }
+
+
+def _rg_gates(params, u):
+    """u: (..., W) conv output → (a, gated_input) in f32."""
+    dt = u.dtype
+    r = jax.nn.sigmoid(u @ params["rg_gr"].astype(dt)).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ params["rg_gi"].astype(dt)).astype(jnp.float32)
+    log_a = -RG_C * jax.nn.softplus(params["rg_a"]) * r  # (.., W)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, mult * i * u.astype(jnp.float32)
+
+
+def rglru_parallel(params, u):
+    """u: (B,S,W) → (B,S,W) via associative scan over S."""
+    a, bterm = _rg_gates(params, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_step(params, state_h, u_t):
+    """state_h: (B,W) f32; u_t: (B,W) → (new_h, out)."""
+    a, bterm = _rg_gates(params, u_t)
+    h = a * state_h + bterm
+    return h, h.astype(u_t.dtype)
+
+
+def rglru_block(params, x, ctx: ShardCtx):
+    """Griffin recurrent block: gate branch ∥ (conv → RG-LRU), out proj."""
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ params["rg_gate"].astype(dt))
+    u = x @ params["rg_in"].astype(dt)
+    u = ctx.cs(u, ctx.dp, None, "model")
+    u = causal_conv1d(u, params["conv_w"], params["conv_b"])
+    h = rglru_parallel(params, u)
+    out = (h * gate) @ params["rg_out"].astype(dt)
+    return ctx.cs(out, ctx.dp, None, None)
+
+
+def rglru_block_prefill(params, x, ctx: ShardCtx):
+    """Parallel block pass that also returns the decode state.
+
+    Returns (out (B,S,D), state) where state matches rglru_block_step's:
+    conv tail = last conv_width-1 *pre-conv* inputs, h = final f32 state.
+    """
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ params["rg_gate"].astype(dt))
+    u_raw = x @ params["rg_in"].astype(dt)
+    u_raw = ctx.cs(u_raw, ctx.dp, None, "model")
+    u = causal_conv1d(u_raw, params["conv_w"], params["conv_b"])
+    a, bterm = _rg_gates(params, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h_seq = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    out = (h_seq.astype(dt) * gate) @ params["rg_out"].astype(dt)
+    conv_width = params["conv_w"].shape[0]
+    state = {
+        "conv": u_raw[:, x.shape[1] - (conv_width - 1):].astype(dt),
+        "h": h_seq[:, -1],  # f32 from the scan
+    }
+    return ctx.cs(out, ctx.dp, None, None), state
+
+
+def rglru_block_step(params, state, x_t, ctx: ShardCtx):
+    """x_t: (B, D); state: {"conv": (B,W-1,Wd), "h": (B,Wd) f32}."""
+    dt = x_t.dtype
+    gate = jax.nn.gelu(x_t @ params["rg_gate"].astype(dt))
+    u = x_t @ params["rg_in"].astype(dt)
+    conv_state, u = conv1d_step(state["conv"], u, params["conv_w"],
+                                params["conv_b"])
+    h_f32, h = rglru_step(params, state["h"], u)
+    out = (h * gate) @ params["rg_out"].astype(dt)
+    return {"conv": conv_state, "h": h_f32}, out
+
+
+def rglru_init_state(batch: int, width: int, conv_width: int = 4,
+                     dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, width), dtype),
+        "h": jnp.zeros((batch, width), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM, arXiv:2405.04517) — matrix memory, parallel form
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLstmCfg:
+    d_model: int
+    num_heads: int
+    proj_factor: float = 2.0
+    conv_width: int = 4
+
+    @property
+    def inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.inner // self.num_heads
+
+
+def init_mlstm(key, cfg: MLstmCfg):
+    ks = jax.random.split(key, 10)
+    d, ud, h = cfg.d_model, cfg.inner, cfg.num_heads
+    return {
+        "lstm_up": dense_init(ks[0], (d, 2 * ud), d),
+        "lstm_q": dense_init(ks[1], (ud, ud), ud),
+        "lstm_k": dense_init(ks[2], (ud, ud), ud),
+        "lstm_v": dense_init(ks[3], (ud, ud), ud),
+        "lstm_i": dense_init(ks[4], (ud, h), ud),
+        "lstm_f": dense_init(ks[5], (ud, h), ud),
+        "lstm_down": dense_init(ks[6], (ud, d), ud),
+        "conv_w": dense_init(ks[7], (cfg.conv_width, ud), cfg.conv_width),
+        "conv_b": jnp.zeros((ud,), jnp.float32),
+    }
+
+
+def _mlstm_parallel_core(q, k, v, i_raw, f_raw, chunk=256):
+    """q,k,v: (B,S,H,hd); i_raw,f_raw: (B,S,H). Returns (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))  # (B,S,H)
+    cumf = jnp.cumsum(logf, axis=1)  # F_t
+
+    def block(qc, posc):
+        # qc: (B,c,H,hd); posc: (c,) absolute positions
+        fq = jnp.take_along_axis(
+            cumf, jnp.broadcast_to(posc[None, :, None], (b, posc.shape[0], h)),
+            axis=1,
+        )  # (B,c,H)
+        dmat = (
+            fq[:, :, None, :] - cumf[:, None, :, :]
+            + i_raw.astype(jnp.float32)[:, None, :, :]
+        )  # (B,c,S,H)
+        mask = posc[None, :, None, None] >= jnp.arange(s)[None, None, :, None]
+        dmat = jnp.where(mask, dmat, -jnp.inf)
+        m = jnp.max(dmat, axis=2, keepdims=True)  # (B,c,1,H)
+        m = jnp.maximum(m, -1e30)
+        w = jnp.exp(dmat - m)  # (B,c,S,H)
+        scores = jnp.einsum(
+            "bchd,bshd->bcsh", qc.astype(jnp.float32),
+            k.astype(jnp.float32),
+        ) * scale
+        sw = scores * w
+        n = jnp.maximum(
+            jnp.abs(sw.sum(axis=2)), jnp.exp(-m[:, :, 0, :])
+        )  # (B,c,H)
+        out = jnp.einsum("bcsh,bshd->bchd", sw, v.astype(jnp.float32))
+        return out / n[..., None]
+
+    if s <= chunk:
+        return block(q, jnp.arange(s)).astype(q.dtype)
+    assert s % chunk == 0
+    nch = s // chunk
+    qc = q.reshape(b, nch, chunk, h, hd)
+
+    def body(i):
+        return block(qc[:, i], i * chunk + jnp.arange(chunk)).astype(q.dtype)
+
+    o = jax.lax.map(body, jnp.arange(nch))
+    return jnp.moveaxis(o, 0, 1).reshape(b, s, h, hd)
+
+
+def mlstm_block(params, x, cfg: MLstmCfg, ctx: ShardCtx):
+    dt = x.dtype
+    b, s, d = x.shape
+    ud, h, hd = cfg.inner, cfg.num_heads, cfg.head_dim
+    up = x @ params["lstm_up"].astype(dt)  # (B,S,2*ud)
+    up = ctx.cs(up, ctx.dp, None, "model")
+    a, gate = up[..., :ud], up[..., ud:]
+    a = jax.nn.silu(
+        causal_conv1d(a, params["conv_w"], params["conv_b"])
+    )
+    q = (a @ params["lstm_q"].astype(dt)).reshape(b, s, h, hd)
+    k = (a @ params["lstm_k"].astype(dt)).reshape(b, s, h, hd)
+    v = (a @ params["lstm_v"].astype(dt)).reshape(b, s, h, hd)
+    i_raw = a @ params["lstm_i"].astype(dt)  # (B,S,H)
+    f_raw = a @ params["lstm_f"].astype(dt)
+    o = _mlstm_parallel_core(q, k, v, i_raw, f_raw)
+    o = o.reshape(b, s, ud) * jax.nn.silu(gate)
+    out = o @ params["lstm_down"].astype(dt)
+    return ctx.cs(out, ctx.dp, None, None)
+
+
+def mlstm_block_prefill(params, x, cfg: MLstmCfg, ctx: ShardCtx):
+    """Parallel block pass that also returns the decode state (C, n, m).
+
+    The closed form of the stabilized recurrence after S steps:
+      m_S = max_t (i_t + F_S − F_t),     F_t = Σ_{j≤t} log σ(f_j)
+      C_S = Σ_t exp(i_t + F_S − F_t − m_S) · v_t k_tᵀ
+      n_S = Σ_t exp(i_t + F_S − F_t − m_S) · k_t
+    which matches unrolling mlstm_block_step exactly.
+    """
+    dt = x.dtype
+    b, s, d = x.shape
+    ud, h, hd = cfg.inner, cfg.num_heads, cfg.head_dim
+    up = x @ params["lstm_up"].astype(dt)
+    up = ctx.cs(up, ctx.dp, None, "model")
+    a_raw, gate = up[..., :ud], up[..., ud:]
+    a = jax.nn.silu(causal_conv1d(a_raw, params["conv_w"], params["conv_b"]))
+    q = (a @ params["lstm_q"].astype(dt)).reshape(b, s, h, hd)
+    k = (a @ params["lstm_k"].astype(dt)).reshape(b, s, h, hd)
+    v = (a @ params["lstm_v"].astype(dt)).reshape(b, s, h, hd)
+    i_raw = (a @ params["lstm_i"].astype(dt)).astype(jnp.float32)  # (B,S,H)
+    f_raw = (a @ params["lstm_f"].astype(dt)).astype(jnp.float32)
+    o = _mlstm_parallel_core(q, k, v, i_raw, f_raw)
+    out = (o.reshape(b, s, ud) * jax.nn.silu(gate)) @ params[
+        "lstm_down"
+    ].astype(dt)
+    # final state (closed form above)
+    logf = jax.nn.log_sigmoid(f_raw)
+    cumf = jnp.cumsum(logf, axis=1)
+    w = i_raw + (cumf[:, -1:, :] - cumf)  # (B,S,H)
+    m_s = w.max(axis=1)  # (B,H)
+    ew = jnp.exp(w - m_s[:, None, :])  # (B,S,H)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c_s = jnp.einsum("bsh,bshv,bshk->bhvk", ew, vf, kf)
+    n_s = jnp.einsum("bsh,bshk->bhk", ew, kf)
+    conv_width = params["conv_w"].shape[0]
+    state = {
+        "conv": a_raw[:, s - (conv_width - 1):],
+        "C": c_s,
+        "n": n_s,
+        "m": m_s,
+    }
+    return ctx.cs(out, ctx.dp, None, None), state
+
+
+def mlstm_init_state(batch: int, cfg: MLstmCfg, dtype=jnp.bfloat16):
+    h, hd = cfg.num_heads, cfg.head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.inner), dtype),
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_block_step(params, state, x_t, cfg: MLstmCfg, ctx: ShardCtx):
+    dt = x_t.dtype
+    b, d = x_t.shape
+    ud, h, hd = cfg.inner, cfg.num_heads, cfg.head_dim
+    up = x_t @ params["lstm_up"].astype(dt)
+    a, gate = up[..., :ud], up[..., ud:]
+    conv_state, a = conv1d_step(state["conv"], a, params["conv_w"],
+                                params["conv_b"])
+    a = jax.nn.silu(a)
+    q = (a @ params["lstm_q"].astype(dt)).reshape(b, h, hd).astype(jnp.float32)
+    k = (a @ params["lstm_k"].astype(dt)).reshape(b, h, hd).astype(jnp.float32)
+    v = (a @ params["lstm_v"].astype(dt)).reshape(b, h, hd).astype(jnp.float32)
+    i_raw = (a @ params["lstm_i"].astype(dt)).astype(jnp.float32)  # (B,H)
+    f_raw = (a @ params["lstm_f"].astype(dt)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + state["m"], i_raw)
+    i_s = jnp.exp(i_raw - m_new)[..., None]  # (B,H,1)
+    f_s = jnp.exp(logf + state["m"] - m_new)[..., None]
+    scale = 1.0 / np.sqrt(hd)
+    c_new = f_s[..., None] * state["C"] + i_s[..., None] * (
+        v[..., :, None] * k[..., None, :]
+    )  # (B,H,hd,hd) outer product v k^T
+    n_new = f_s * state["n"] + i_s * k
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, q * scale)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q * scale)),
+        jnp.exp(-m_new),
+    )
+    o = (num / den[..., None]).reshape(b, ud).astype(dt)
+    o = o * jax.nn.silu(gate)
+    out = o @ params["lstm_down"].astype(dt)
+    new_state = {"conv": conv_state, "C": c_new, "n": n_new, "m": m_new}
+    return new_state, ctx.cs(out, ctx.dp, None)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, honest sequential scan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SLstmCfg:
+    d_model: int
+    num_heads: int
+    proj_factor: float = 1.0
+
+    @property
+    def inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+
+def init_slstm(key, cfg: SLstmCfg):
+    ks = jax.random.split(key, 10)
+    d, ud = cfg.d_model, cfg.inner
+    return {
+        "lstm_z": dense_init(ks[0], (d, ud), d),
+        "lstm_i": dense_init(ks[1], (d, ud), d),
+        "lstm_f": dense_init(ks[2], (d, ud), d),
+        "lstm_o": dense_init(ks[3], (d, ud), d),
+        # block-diagonal recurrent weights ≈ per-head dense recurrence;
+        # diagonal here (xLSTM's powerful variant uses block-diag — the
+        # diagonal keeps the honest sequential dependency at lower cost)
+        "r_z": jnp.zeros((ud,), jnp.float32),
+        "r_i": jnp.zeros((ud,), jnp.float32),
+        "r_f": jnp.zeros((ud,), jnp.float32),
+        "r_o": jnp.zeros((ud,), jnp.float32),
+        "lstm_down": dense_init(ks[8], (ud, d), ud),
+    }
+
+
+def slstm_init_state(batch: int, cfg: SLstmCfg, dtype=jnp.float32):
+    ud = cfg.inner
+    z = jnp.zeros((batch, ud), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, ud), -1e30,
+                                                  jnp.float32)}
+
+
+def _slstm_cell(params, state, zx, ix, fx, ox):
+    """One step; gate pre-activations from input already computed."""
+    h_prev = state["h"]
+    z = jnp.tanh(zx + params["r_z"] * h_prev)
+    i_raw = ix + params["r_i"] * h_prev
+    f_raw = fx + params["r_f"] * h_prev
+    o = jax.nn.sigmoid(ox + params["r_o"] * h_prev)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + state["m"], i_raw)
+    i_s = jnp.exp(i_raw - m_new)
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * z
+    n = jnp.maximum(f_s * state["n"] + i_s, 1e-6)
+    h = o * (c / n)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_block(params, x, cfg: SLstmCfg, ctx: ShardCtx):
+    """x: (B,S,D) → sequential scan over S (inherently serial)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    zx = (x @ params["lstm_z"].astype(dt)).astype(jnp.float32)
+    ix = (x @ params["lstm_i"].astype(dt)).astype(jnp.float32)
+    fx = (x @ params["lstm_f"].astype(dt)).astype(jnp.float32)
+    ox = (x @ params["lstm_o"].astype(dt)).astype(jnp.float32)
+    state0 = slstm_init_state(b, cfg)
+
+    def step(state, inputs):
+        state = _slstm_cell(params, state, *inputs)
+        return state, state["h"]
+
+    _, hs = jax.lax.scan(
+        step, state0,
+        (zx.swapaxes(0, 1), ix.swapaxes(0, 1), fx.swapaxes(0, 1),
+         ox.swapaxes(0, 1)),
+    )
+    h = hs.swapaxes(0, 1).astype(dt)  # (B,S,ud)
+    out = h @ params["lstm_down"].astype(dt)
+    return ctx.cs(out, ctx.dp, None, None)
+
+
+def slstm_block_prefill(params, x, cfg: SLstmCfg, ctx: ShardCtx):
+    """Sequential block pass that also returns the final decode state."""
+    dt = x.dtype
+    b, s, d = x.shape
+    zx = (x @ params["lstm_z"].astype(dt)).astype(jnp.float32)
+    ix = (x @ params["lstm_i"].astype(dt)).astype(jnp.float32)
+    fx = (x @ params["lstm_f"].astype(dt)).astype(jnp.float32)
+    ox = (x @ params["lstm_o"].astype(dt)).astype(jnp.float32)
+    state0 = slstm_init_state(b, cfg)
+
+    def step(state, inputs):
+        state = _slstm_cell(params, state, *inputs)
+        return state, state["h"]
+
+    final, hs = jax.lax.scan(
+        step, state0,
+        (zx.swapaxes(0, 1), ix.swapaxes(0, 1), fx.swapaxes(0, 1),
+         ox.swapaxes(0, 1)),
+    )
+    h = hs.swapaxes(0, 1).astype(dt)
+    out = h @ params["lstm_down"].astype(dt)
+    return ctx.cs(out, ctx.dp, None, None), final
+
+
+def slstm_block_step(params, state, x_t, cfg: SLstmCfg, ctx: ShardCtx):
+    dt = x_t.dtype
+    zx = (x_t @ params["lstm_z"].astype(dt)).astype(jnp.float32)
+    ix = (x_t @ params["lstm_i"].astype(dt)).astype(jnp.float32)
+    fx = (x_t @ params["lstm_f"].astype(dt)).astype(jnp.float32)
+    ox = (x_t @ params["lstm_o"].astype(dt)).astype(jnp.float32)
+    new_state = _slstm_cell(params, state, zx, ix, fx, ox)
+    out = new_state["h"].astype(dt) @ params["lstm_down"].astype(dt)
+    return new_state, ctx.cs(out, ctx.dp, None)

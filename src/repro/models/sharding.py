@@ -1,0 +1,198 @@
+"""Sharding rules for the (pod, data, model) production mesh.
+
+Strategy (baseline; §Perf hillclimbs start from here):
+  * data parallelism over ("pod", "data") — batch dim of activations,
+  * FSDP over "data" — the d_model axis of every weight matrix,
+  * tensor parallelism over "model" — heads / FFN-hidden / expert axes,
+  * expert parallelism — MoE expert axis over "model",
+  * sequence parallelism — decode-time KV length over "model" (lets the
+    32K/500K caches fit HBM without padding KV heads to the TP width).
+
+Every rule is guarded by divisibility: a dim that does not divide by its
+mesh axis stays unsharded (e.g. whisper's 20 heads or llama4-scout's 40
+heads on a 16-way model axis) — XLA then replicates that matmul's head
+dim, which the roofline table surfaces honestly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    """Threads the mesh through model code; no-ops when mesh is None.
+
+    Optimization flags (all False = the paper-faithful/naive baseline
+    recorded in results/dryrun_baseline.jsonl; see EXPERIMENTS.md §Perf):
+      bf16_weights — cast fp32 master weights to bf16 *before* the FSDP
+        all-gather (XLA gathers at the producer dtype: casting at use
+        sites after the gather moves 2× the bytes).
+    """
+
+    mesh: Optional[Mesh] = None
+    bf16_weights: bool = False
+    # Constrain each scanned layer-group's params inside the scan body.
+    # with_sharding_constraint transposes to the same constraint on the
+    # cotangent, so weight gradients are *born* sharded inside the
+    # backward scan — GSPMD then emits a reduce-scatter per dW instead
+    # of a full-tensor all-reduce (2× less wire).
+    constrain_scanned_params: bool = False
+    # Sequence parallelism on the residual carry: activations between
+    # layer groups are sharded over "model" on the sequence axis. Wire-
+    # neutral for the TP all-reduces (RS+AG = AR) but the scan's per-
+    # iteration activation stash shrinks 16× — which is what lets the
+    # save-TP-outputs remat policy (and larger microbatches) fit HBM.
+    sp_carry: bool = False
+    # Remat policy for the layer-group scan: "none" (recompute all,
+    # default) or "save_tp" (save the post-collective projection outputs
+    # so the backward does not re-run the forward TP all-reduces).
+    remat_policy: str = "none"
+
+    @property
+    def act_seq(self):
+        """Sharding of the sequence axis for boundary activations."""
+        return "model" if self.sp_carry else None
+
+    @property
+    def dp(self):
+        if self.mesh is not None and "pod" in self.mesh.axis_names:
+            return ("pod", "data")
+        return "data"
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None:
+            return 1
+        if name not in self.mesh.axis_names:
+            return 1
+        return self.mesh.shape[name]
+
+    @property
+    def dp_size(self) -> int:
+        return self.axis_size("pod") * self.axis_size("data")
+
+    def cs(self, x, *spec):
+        """with_sharding_constraint when a mesh is present."""
+        if self.mesh is None:
+            return x
+        fixed = []
+        for dim, s in zip(x.shape, spec):
+            fixed.append(self._fit(dim, s))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*fixed))
+        )
+
+    def _fit(self, dim: int, s):
+        """Drop axes that do not divide the dimension."""
+        if s is None:
+            return None
+        axes = s if isinstance(s, tuple) else (s,)
+        total = 1
+        for a in axes:
+            total *= self.axis_size(a)
+        if total <= 1 or dim % total != 0:
+            return None
+        return s
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings by path-name rules
+# ---------------------------------------------------------------------------
+
+_RULES: Tuple[Tuple[str, Tuple] ,...] = (
+    # embeddings / unembedding: vocab over model (TP), d_model over data (FSDP)
+    (r"embed", ("model", "data")),
+    (r"lm_head", ("data", "model")),
+    (r"patch_proj", ("data", "model")),
+    # attention
+    (r"wq$", ("data", "model", None)),
+    (r"wk$", ("data", "model", None)),
+    (r"wv$", ("data", "model", None)),
+    (r"wo$", ("model", None, "data")),
+    (r"q_norm|k_norm", (None,)),
+    # dense mlp
+    (r"wi$|wg$", ("data", "model")),
+    (r"wd$", ("model", "data")),
+    # MoE
+    (r"router", ("data", None)),
+    (r"we_in$|we_gate$", ("model", "data", None)),  # (E, D, F)
+    (r"we_out$", ("model", None, "data")),  # (E, F, D)
+    # recurrent blocks: recurrent width over model
+    (r"rg_in$|rg_gate$", ("data", "model")),
+    (r"rg_out$", ("model", "data")),
+    (r"rg_a$|rg_input_gate$|rg_rec_gate$|conv_w$|conv_b$", (None,)),
+    (r"lstm_(q|k|v|i|f|o|z)$", ("data", "model")),
+    (r"lstm_up$", ("data", "model")),
+    (r"lstm_down$", ("model", "data")),
+    # norms / biases / scalars: replicated
+    (r"norm|scale|bias|gamma|beta", (None,)),
+)
+
+
+def spec_for(path: str, shape: Tuple[int, ...], stacked: bool) -> Tuple:
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            out = spec
+            break
+    else:
+        out = (None,) * len(shape)
+    if stacked:
+        out = (None,) + tuple(out)
+    # pad/trim to rank
+    out = tuple(out)[: len(shape)]
+    out = out + (None,) * (len(shape) - len(out))
+    return out
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def constrain_group_params(g, ctx: "ShardCtx"):
+    """Apply path-rule sharding constraints to one scanned group's
+    params (leading group axis already sliced off by lax.scan)."""
+    if not ctx.constrain_scanned_params or ctx.mesh is None:
+        return g
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        spec = spec_for(ps, leaf.shape, stacked=False)
+        return ctx.cs(leaf, *spec)
+
+    return jax.tree_util.tree_map_with_path(one, g)
+
+
+def param_specs(params, *, stacked_prefixes=("groups",)) -> object:
+    """PartitionSpec pytree matching `params` (path-name rules)."""
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        stacked = any(ps.startswith(pref) for pref in stacked_prefixes)
+        spec = spec_for(ps, leaf.shape, stacked)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def param_shardings(params, mesh: Mesh, **kw):
+    ctx = ShardCtx(mesh)
+    specs = param_specs(params, **kw)
+
+    def to_sharding(leaf, spec):
+        fixed = tuple(
+            ctx._fit(dim, s) for dim, s in zip(leaf.shape, tuple(spec))
+        )
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree_util.tree_map(to_sharding, params, specs)

@@ -1,0 +1,20 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    return jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, total_steps: int, warmup_steps: int = 0,
+                    min_ratio: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(s, warmup_steps)
+    t = jnp.clip(
+        (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return warm * cos

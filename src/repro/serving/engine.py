@@ -1,0 +1,259 @@
+"""Continuous-batching serving engine over the paged KV pool.
+
+Flow per scheduler round:
+  1. admit queued requests while decode slots + pages allow,
+  2. per admitted request: prefix-dedup lookup (§5.1 pointer case) —
+     already-cached full pages are *shared, not recomputed*; only the
+     uncovered suffix is prefilled (parallel dense prefill, then bulk
+     page write),
+  3. one fused decode step for the whole active batch via the
+     paged-attention kernel (GOP-paged KV),
+  4. finished requests retire their pages into the LRU_VSS prefix cache.
+
+Supports the dense-attention ("attn"-pattern) families; recurrent/MoE
+archs serve through the dense-cache decode path in repro.models.model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models.sharding import ShardCtx
+from repro.serving.pages import PagePool, PagePoolConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    submitted_s: float = 0.0
+    first_token_s: float = 0.0
+    done_s: float = 0.0
+    dedup_pages: int = 0
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    page_ids: List[int]
+    length: int  # tokens currently in the KV pages
+    last_token: int
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        page_size: int = 16,
+        num_pages: int = 256,
+        max_batch: int = 8,
+        eos_id: Optional[int] = None,
+    ):
+        assert set(cfg.pattern) == {"attn"}, "paged engine serves dense archs"
+        self.cfg = cfg
+        self.params = params
+        self.ctx = ShardCtx(None)
+        self.max_batch = max_batch
+        self.eos_id = eos_id
+        self.pool = PagePool(PagePoolConfig(
+            num_pages=num_pages,
+            page_size=page_size,
+            num_layers=cfg.num_layers,
+            num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.hd,
+        ))
+        self.queue: List[Request] = []
+        self.active: List[_Active] = []
+        self._next_rid = 0
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl, static_argnums=(2,))
+        self.metrics = {"decode_steps": 0, "prefill_tokens": 0,
+                        "dedup_tokens": 0}
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, prompt: List[int], max_new: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(
+            Request(rid, list(prompt), max_new, submitted_s=time.perf_counter())
+        )
+        return rid
+
+    def run(self) -> Dict[int, Request]:
+        done: Dict[int, Request] = {}
+        while self.queue or self.active:
+            self._admit()
+            self._decode_round(done)
+        return done
+
+    # -- prefill with prefix dedup ---------------------------------------------
+    def _admit(self):
+        while self.queue and len(self.active) < self.max_batch:
+            req = self.queue.pop(0)
+            ps = self.pool.cfg.page_size
+            shared, covered = self.pool.lookup_prefix(req.prompt)
+            req.dedup_pages = len(shared)
+            self.metrics["dedup_tokens"] += covered
+            prompt = req.prompt
+            # the *last* prompt token is fed to decode (it produces the
+            # first new token), so the KV run covers prompt[:-1]
+            kv_tokens = prompt[:-1]
+            needed = max(len(kv_tokens) - covered, 0)
+            page_ids = list(shared)
+            total_pages = -(-max(len(kv_tokens), 1) // ps)
+            while len(page_ids) < total_pages:
+                page_ids.append(self.pool.alloc())
+            if needed > 0:
+                suffix = np.asarray(kv_tokens, np.int32)[None, :]
+                ks, vs = self._prefill(
+                    self.params, jnp.asarray(suffix), len(kv_tokens)
+                )
+                # write only the uncovered tail pages (dedup'd pages stand)
+                self.pool.write_run(
+                    np.asarray(ks), np.asarray(vs), page_ids, len(kv_tokens)
+                )
+                self.metrics["prefill_tokens"] += needed
+            self.pool.register_prefix(kv_tokens, page_ids)
+            self.active.append(
+                _Active(req, page_ids, len(kv_tokens), prompt[-1])
+            )
+
+    def _prefill_impl(self, params, tokens, length):
+        """Dense parallel prefill returning per-layer K/V (L, S, Hkv, hd)."""
+        cfg = self.cfg
+        plan = M.layer_plan(cfg)
+        x = M._embed_tokens(params, tokens, cfg, self.ctx)
+        positions = jnp.arange(length)
+        acfg = M._attn_cfg(cfg)
+        ks, vs = [], []
+
+        def run_layer(p, x):
+            h = L.apply_norm(p["ln1"], x, cfg.norm_type)
+            q, k, v = L.attn_qkv(p["attn"], h, acfg, positions, self.ctx)
+            o = L.attention(q, k, v, causal=True)
+            x = x + L.attn_out(p["attn"], o, self.ctx)
+            h = L.apply_norm(p["ln2"], x, cfg.norm_type)
+            x = x + L.mlp_block(p["mlp"], h, cfg.act, self.ctx)
+            return x, k[0], v[0]
+
+        # unrolled (serving configs are smoke-sized; dryrun covers scale)
+        for g in range(plan.n_groups):
+            p = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
+            x, k, v = run_layer(p["0_attn"], x)
+            ks.append(k)
+            vs.append(v)
+        for i, typ in enumerate(plan.tail):
+            x, k, v = run_layer(params[f"tail_{i}_{typ}"], x)
+            ks.append(k)
+            vs.append(v)
+        return jnp.stack(ks), jnp.stack(vs)
+
+    # -- batched paged decode ----------------------------------------------------
+    def _decode_impl(self, params, k_pages, v_pages, tokens, block_table,
+                     seq_lens, slot_pages, slot_offsets):
+        """One token for every active sequence.
+
+        tokens: (B,) int32 — the token being fed;
+        block_table: (B, maxp); seq_lens: (B,) = KV length BEFORE this
+        token; slot_pages/offsets: (B,) where the new token's K/V lands.
+        """
+        cfg = self.cfg
+        plan = M.layer_plan(cfg)
+        ctx = self.ctx
+        x = M._embed_tokens(params, tokens[:, None], cfg, ctx)
+        acfg = M._attn_cfg(cfg)
+        pos = seq_lens  # 0-based position of the fed token
+        new_len = seq_lens + 1
+        li = 0
+
+        def run_layer(p, x, k_pages, v_pages, li):
+            h = L.apply_norm(p["ln1"], x, cfg.norm_type)
+            q, k, v = M._step_attn_common(p["attn"], h, cfg, pos, ctx)
+            kp = k_pages.at[li, slot_pages, slot_offsets].set(
+                k[:, 0].astype(k_pages.dtype)
+            )
+            vp = v_pages.at[li, slot_pages, slot_offsets].set(
+                v[:, 0].astype(v_pages.dtype)
+            )
+            o = ops.paged_decode_attention(
+                q[:, 0], kp[li], vp[li], block_table, new_len,
+            )
+            x = x + L.attn_out(p["attn"], o[:, None].astype(x.dtype), ctx)
+            h = L.apply_norm(p["ln2"], x, cfg.norm_type)
+            x = x + L.mlp_block(p["mlp"], h, cfg.act, ctx)
+            return x, kp, vp
+
+        for g in range(plan.n_groups):
+            p = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
+            x, k_pages, v_pages = run_layer(p["0_attn"], x, k_pages, v_pages, li)
+            li += 1
+        for i, typ in enumerate(plan.tail):
+            x, k_pages, v_pages = run_layer(
+                params[f"tail_{i}_{typ}"], x, k_pages, v_pages, li
+            )
+            li += 1
+        logits = M.unembed(params, x, cfg, ctx)
+        return logits[:, 0], k_pages, v_pages
+
+    def _decode_round(self, done: Dict[int, Request]):
+        if not self.active:
+            return
+        ps = self.pool.cfg.page_size
+        b = len(self.active)
+        # ensure every sequence has a slot page for the incoming token
+        for a in self.active:
+            if a.length % ps == 0 and (
+                len(a.page_ids) <= a.length // ps
+            ):
+                a.page_ids.append(self.pool.alloc())
+        maxp = max(len(a.page_ids) for a in self.active)
+        bt = np.full((b, maxp), -1, np.int32)
+        for i, a in enumerate(self.active):
+            bt[i, : len(a.page_ids)] = a.page_ids
+        tokens = np.asarray([a.last_token for a in self.active], np.int32)
+        seq_lens = np.asarray([a.length for a in self.active], np.int32)
+        slot_pages = np.asarray(
+            [a.page_ids[a.length // ps] for a in self.active], np.int32
+        )
+        slot_offsets = seq_lens % ps
+        logits, self.pool.k, self.pool.v = self._decode(
+            self.params, self.pool.k, self.pool.v, jnp.asarray(tokens),
+            jnp.asarray(bt), jnp.asarray(seq_lens),
+            jnp.asarray(slot_pages), jnp.asarray(slot_offsets),
+        )
+        self.metrics["decode_steps"] += 1
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        still: List[_Active] = []
+        for i, a in enumerate(self.active):
+            tok = int(next_tokens[i])
+            if not a.req.out:
+                a.req.first_token_s = time.perf_counter()
+            a.req.out.append(tok)
+            a.length += 1
+            a.last_token = tok
+            finished = len(a.req.out) >= a.req.max_new or (
+                self.eos_id is not None and tok == self.eos_id
+            )
+            if finished:
+                a.req.done_s = time.perf_counter()
+                kv_tokens = a.req.prompt[:-1] + a.req.out[: a.length - (
+                    len(a.req.prompt) - 1
+                )]
+                self.pool.retain(kv_tokens[: a.length], a.page_ids)
+                done[a.req.rid] = a.req
+            else:
+                still.append(a)
+        self.active = still

@@ -1,0 +1,199 @@
+"""Paged KV cache — VSS's GOP pages mapped onto serving state.
+
+The KV cache of one request is a *logical video*; its fixed-size pages
+are GOPs (§2). The pool applies the paper's machinery:
+
+  * **prefix dedup is the joint-compression analogue** (§5.1): two
+    requests sharing a token prefix store those pages once. The paper's
+    duplicate case (‖H−I‖ ≤ ε → replace the GOP with a pointer) becomes
+    a content-hash pointer; the fingerprint index (§5.1.3's histogram/
+    BIRCH stage) becomes a rolling hash over (position, token) pairs —
+    exact, since token pages at equal positions are bitwise-identical.
+  * **eviction is LRU_VSS** (§4): retained (finished-request) page runs
+    carry sequence numbers ``LRU + γ·p − ζ·r + b`` — position offset p
+    protects run middles (re-extending a prefix needs its *contiguous*
+    head, so nibble ends first), redundancy r = extra refcount holders
+    (shared pages are cheap to unhook), and the baseline guard b = +∞
+    pins pages of *running* requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class PagePoolConfig:
+    num_pages: int
+    page_size: int  # tokens per page (the GOP length)
+    num_layers: int
+    num_kv_heads: int
+    head_dim: int
+    gamma: float = 2.0  # LRU_VSS position weight (§4 prototype values)
+    zeta: float = 1.0
+    dtype: object = jnp.bfloat16
+
+
+def prefix_hash(tokens: Sequence[int]) -> str:
+    return hashlib.sha1(np.asarray(tokens, np.int32).tobytes()).hexdigest()
+
+
+@dataclasses.dataclass
+class RetainedRun:
+    """A finished request's page run kept for future prefix hits."""
+
+    page_ids: List[int]
+    hashes: List[str]  # cumulative prefix hash at each page boundary
+    lru: int
+
+
+class PagePool:
+    def __init__(self, cfg: PagePoolConfig):
+        self.cfg = cfg
+        shape = (
+            cfg.num_layers, cfg.num_pages, cfg.page_size,
+            cfg.num_kv_heads, cfg.head_dim,
+        )
+        self.k = jnp.zeros(shape, cfg.dtype)
+        self.v = jnp.zeros(shape, cfg.dtype)
+        self.free: List[int] = list(range(cfg.num_pages))
+        self.refcount = np.zeros(cfg.num_pages, np.int64)
+        # prefix index: cumulative hash -> page id (the §5.1.3 analogue)
+        self.prefix_index: Dict[str, int] = {}
+        self.retained: List[RetainedRun] = []
+        self._clock = 0
+
+    # -- allocation ---------------------------------------------------------
+    def tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def alloc(self) -> int:
+        while not self.free:
+            if not self._evict_one():
+                raise MemoryError("page pool exhausted (all pages pinned)")
+        pid = self.free.pop()
+        self.refcount[pid] = 1
+        return pid
+
+    def share(self, pid: int) -> int:
+        self.refcount[pid] += 1
+        return pid
+
+    def release(self, pid: int):
+        self.refcount[pid] -= 1
+        if self.refcount[pid] <= 0:
+            self.refcount[pid] = 0
+            self.prefix_index = {
+                h: p for h, p in self.prefix_index.items() if p != pid
+            }
+            self.free.append(pid)
+
+    # -- prefix dedup (§5.1 duplicate-GOP pointer case) -----------------------
+    def lookup_prefix(self, tokens: Sequence[int]) -> Tuple[List[int], int]:
+        """Longest run of already-stored full pages for this prompt.
+        Returns (shared page ids, tokens covered)."""
+        ps = self.cfg.page_size
+        shared: List[int] = []
+        covered = 0
+        for end in range(ps, len(tokens) + 1, ps):
+            h = prefix_hash(tokens[:end])
+            pid = self.prefix_index.get(h)
+            if pid is None:
+                break
+            shared.append(self.share(pid))
+            covered = end
+        return shared, covered
+
+    def register_prefix(self, tokens: Sequence[int], page_ids: List[int]):
+        ps = self.cfg.page_size
+        for i, pid in enumerate(page_ids):
+            end = (i + 1) * ps
+            if end > len(tokens):
+                break  # partial tail page: content still mutable
+            self.prefix_index.setdefault(prefix_hash(tokens[:end]), pid)
+
+    # -- retention + LRU_VSS eviction (§4) ------------------------------------
+    def retain(self, tokens: Sequence[int], page_ids: List[int]):
+        """Keep a finished request's pages for future prefix hits."""
+        ps = self.cfg.page_size
+        full = len(tokens) // ps
+        hashes = [prefix_hash(tokens[: (i + 1) * ps]) for i in range(full)]
+        self.register_prefix(tokens, page_ids[:full])
+        self.retained.append(
+            RetainedRun(list(page_ids[:full]), hashes, self.tick())
+        )
+        for pid in page_ids[full:]:  # partial tail: no future value
+            self.release(pid)
+
+    def _sequence_numbers(self) -> List[Tuple[float, int, int]]:
+        """(seq, run_idx, pos_in_run) per evictable retained page."""
+        out = []
+        for ri, run in enumerate(self.retained):
+            n = len(run.page_ids)
+            for i, pid in enumerate(run.page_ids):
+                # baseline guard b (implicit): pages of *running* requests
+                # never appear here — only finished, retained runs do.
+                seq = float(run.lru)
+                seq += self.cfg.gamma * min(i, n - 1 - i)  # position p
+                seq -= self.cfg.zeta * max(self.refcount[pid] - 1, 0)  # r
+                out.append((seq, ri, i))
+        return out
+
+    def _evict_one(self) -> bool:
+        cands = self._sequence_numbers()
+        if not cands:
+            return False
+        cands.sort()
+        _, ri, i = cands[0]
+        run = self.retained[ri]
+        pid = run.page_ids.pop(i)
+        h = run.hashes.pop(i)
+        # dropping a middle page splits the run; the prefix chain past the
+        # hole is dead for extension purposes but pages stay shareable
+        if self.prefix_index.get(h) == pid:
+            self.prefix_index.pop(h, None)
+        self.release(pid)
+        if not run.page_ids:
+            self.retained.pop(ri)
+        return True
+
+    # -- device-side writes ----------------------------------------------------
+    def write_token(self, layer_kv, page_ids: np.ndarray, offsets: np.ndarray):
+        """Batched single-token write. layer_kv: (k, v) each (L, B, Hkv, hd);
+        page_ids/offsets: (B,)."""
+        k_new, v_new = layer_kv
+        l_idx = np.arange(self.cfg.num_layers)[:, None]
+        self.k = self.k.at[l_idx, page_ids[None, :], offsets[None, :]].set(
+            k_new.astype(self.cfg.dtype)
+        )
+        self.v = self.v.at[l_idx, page_ids[None, :], offsets[None, :]].set(
+            v_new.astype(self.cfg.dtype)
+        )
+
+    def write_run(self, layer_k, layer_v, page_ids: List[int], length: int):
+        """Bulk prefill write. layer_k/v: (L, S, Hkv, hd)."""
+        ps = self.cfg.page_size
+        for i, pid in enumerate(page_ids):
+            s0 = i * ps
+            s1 = min(s0 + ps, length)
+            if s0 >= length:
+                break
+            chunk_k = layer_k[:, s0:s1]
+            chunk_v = layer_v[:, s0:s1]
+            self.k = self.k.at[:, pid, : s1 - s0].set(
+                chunk_k.astype(self.cfg.dtype)
+            )
+            self.v = self.v.at[:, pid, : s1 - s0].set(
+                chunk_v.astype(self.cfg.dtype)
+            )
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.cfg.num_pages - len(self.free)

@@ -1,0 +1,2 @@
+from repro.train.checkpoint import CheckpointManager, tree_to_frames, frames_to_tree  # noqa: F401
+from repro.train.runner import Trainer, TrainerConfig  # noqa: F401

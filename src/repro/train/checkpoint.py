@@ -1,0 +1,261 @@
+"""Checkpointing on VSS — checkpoints are logical videos over training time.
+
+Mapping (DESIGN.md §3.3):
+  * a checkpoint step serializes the state pytree into uint8 *frames*
+    (fixed frame geometry, zero-padded tail) and writes one logical video
+    ``<run>/<step>/<repr>`` per representation,
+  * the **fp32 master** is the baseline-quality cover: retention always
+    keeps the newest `keep_last` masters (the paper's "original can
+    always be reproduced" guarantee, re-expressed over training time),
+  * **bf16 / int8 serving copies** are derived views — cheap to recreate,
+    first to go under storage pressure (LRU_VSS redundancy offset: they
+    are strictly-lower-quality covers of the master),
+  * cold masters are shrunk in place by VSS's **deferred zstd
+    compression** machinery (same GOP-wrapping path as §5.2),
+  * writes are atomic: the video is written under a temp name and the
+    manifest row is committed last; a crash mid-write leaves no visible
+    checkpoint. `save_async` runs the serialization + write off-thread
+    (the training loop keeps stepping), `wait()` joins.
+
+Restore picks the best representation for the request: exact dtype view
+if cached, else the master. Elastic restore re-lays-out leaves to any
+mesh (values are host numpy; the caller device_puts with new shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.store import VSS
+
+FRAME_H, FRAME_W, FRAME_C = 64, 128, 3
+FRAME_BYTES = FRAME_H * FRAME_W * FRAME_C
+
+REPR_DTYPES = {"f32": np.float32, "bf16": jnp.bfloat16, "int8": np.int8}
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> frames
+# ---------------------------------------------------------------------------
+
+def _leaf_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def tree_to_frames(tree, cast=None) -> Tuple[np.ndarray, Dict]:
+    """Serialize a pytree to (T, 64, 128, 3) uint8 frames + a spec."""
+    leaves = _leaf_paths(tree)
+    bufs, spec = [], []
+    for key, leaf in leaves:
+        arr = np.asarray(leaf)
+        scale = None
+        if cast == "bf16" and arr.dtype == np.float32:
+            arr = np.asarray(jnp.asarray(arr, jnp.bfloat16))
+        elif cast == "int8" and arr.dtype == np.float32:
+            scale = float(max(np.abs(arr).max(), 1e-12) / 127.0)
+            arr = np.clip(np.round(arr / scale), -127, 127).astype(np.int8)
+        b = arr.tobytes()
+        spec.append({
+            "key": key,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "nbytes": len(b),
+            "scale": scale,
+        })
+        bufs.append(b)
+    blob = b"".join(bufs)
+    pad = (-len(blob)) % FRAME_BYTES
+    blob += b"\0" * pad
+    frames = np.frombuffer(blob, np.uint8).reshape(
+        -1, FRAME_H, FRAME_W, FRAME_C
+    )
+    return frames, {"leaves": spec, "total": len(blob) - pad}
+
+
+def frames_to_tree(frames: np.ndarray, spec: Dict, like=None):
+    blob = frames.tobytes()
+    leaves, off = [], 0
+    for s in spec["leaves"]:
+        raw = blob[off: off + s["nbytes"]]
+        off += s["nbytes"]
+        dtype = jnp.bfloat16 if s["dtype"] == "bfloat16" else np.dtype(
+            s["dtype"]
+        )
+        arr = np.frombuffer(raw, dtype).reshape(s["shape"])
+        if s["scale"] is not None:
+            arr = arr.astype(np.float32) * s["scale"]
+        leaves.append(arr)
+    if like is not None:
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+    return leaves
+
+
+# ---------------------------------------------------------------------------
+# manager
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CheckpointInfo:
+    step: int
+    reprs: List[str]
+    nbytes: int
+    created: float
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        root: str,
+        run: str = "run",
+        *,
+        keep_last: int = 3,
+        derived_reprs: Tuple[str, ...] = (),
+        vss: Optional[VSS] = None,
+    ):
+        self.root = root
+        self.run = run
+        self.keep_last = keep_last
+        self.derived_reprs = derived_reprs
+        os.makedirs(root, exist_ok=True)
+        self.vss = vss or VSS(
+            os.path.join(root, "vss"),
+            enable_deferred=False,  # we drive deferred compression explicitly
+            enable_compaction=False,
+        )
+        self._manifest_path = os.path.join(root, f"{run}.manifest.json")
+        self._manifest: Dict[str, Dict] = self._load_manifest()
+        self._worker: Optional[threading.Thread] = None
+
+    # -- manifest (committed last → atomicity) ------------------------------
+    def _load_manifest(self) -> Dict[str, Dict]:
+        if os.path.exists(self._manifest_path):
+            with open(self._manifest_path) as f:
+                return json.load(f)
+        return {}
+
+    def _commit_manifest(self):
+        tmp = self._manifest_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._manifest, f)
+        os.replace(tmp, self._manifest_path)
+
+    def _video_name(self, step: int, repr_: str) -> str:
+        return f"{self.run}.step{step:08d}.{repr_}"
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state, *, blocking: bool = True):
+        state = jax.tree_util.tree_map(np.asarray, state)  # snapshot now
+        if blocking:
+            self._save_impl(step, state)
+        else:
+            self.wait()
+            self._worker = threading.Thread(
+                target=self._save_impl, args=(step, state), daemon=True
+            )
+            self._worker.start()
+
+    def wait(self):
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    def _save_impl(self, step: int, state):
+        entry = {"reprs": {}, "created": time.time()}
+        total = 0
+        for repr_ in ("f32",) + tuple(self.derived_reprs):
+            cast = None if repr_ == "f32" else repr_
+            frames, spec = tree_to_frames(state, cast=cast)
+            name = self._video_name(step, repr_)
+            if self.vss.catalog.logical_exists(name):
+                for p in self.vss.catalog.drop_logical(name):
+                    _unlink_quiet(p)
+            self.vss.write(name, frames, fps=1.0, codec="rgb")
+            entry["reprs"][repr_] = {
+                "video": name,
+                "spec": spec,
+                "frames": int(frames.shape[0]),
+            }
+            total += self.vss.catalog.total_bytes(name)
+        entry["nbytes"] = total
+        self._manifest[str(step)] = entry
+        self._gc()
+        self._commit_manifest()
+
+    # -- retention + deferred compression of cold masters -------------------
+    def _gc(self):
+        steps = sorted(int(s) for s in self._manifest)
+        protect = set(steps[-self.keep_last:])
+        for s in steps:
+            if s in protect:
+                continue
+            entry = self._manifest.pop(str(s))
+            for r in entry["reprs"].values():
+                for p in self.vss.catalog.drop_logical(r["video"]):
+                    _unlink_quiet(p)
+        # cold = every protected master except the newest: zstd-wrap in place
+        for s in steps[-self.keep_last:-1]:
+            if str(s) not in self._manifest:
+                continue
+            name = self._manifest[str(s)]["reprs"]["f32"]["video"]
+            while self.vss.deferred.compress_one(name) is not None:
+                pass
+            self._manifest[str(s)]["nbytes"] = sum(
+                self.vss.catalog.total_bytes(r["video"])
+                for r in self._manifest[str(s)]["reprs"].values()
+            )
+
+    # -- restore --------------------------------------------------------------
+    def steps(self) -> List[int]:
+        return sorted(int(s) for s in self._manifest)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, *, repr_: str = "f32",
+                like=None):
+        """Returns the state pytree (host numpy) at `step` (default latest)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoints")
+        entry = self._manifest[str(step)]
+        use = repr_ if repr_ in entry["reprs"] else "f32"
+        r = entry["reprs"][use]
+        res = self.vss.read(r["video"], codec="rgb", cache=False)
+        return frames_to_tree(res.frames, r["spec"], like=like), step
+
+    def stats(self) -> Dict[int, CheckpointInfo]:
+        return {
+            int(s): CheckpointInfo(
+                int(s), list(e["reprs"]), e["nbytes"], e["created"]
+            )
+            for s, e in self._manifest.items()
+        }
+
+    def close(self):
+        self.wait()
+        self.vss.close()
+
+
+def _unlink_quiet(path: str):
+    try:
+        os.unlink(path)
+    except FileNotFoundError:
+        pass

@@ -1,0 +1,146 @@
+"""Fault-tolerant training runner.
+
+Responsibilities (the large-scale-runnability story, exercised for real
+on this host and identically shaped for a 1000-node launch):
+
+  * deterministic, resumable stepping: the step counter addresses the
+    data pipeline, so restart-from-checkpoint replays identically,
+  * atomic async checkpoints via :class:`CheckpointManager` (VSS-backed,
+    multi-representation, deferred-compressed cold masters),
+  * crash/restart: any exception (or the injected `SimulatedFailure`)
+    can be recovered from by constructing a new Trainer over the same
+    root and calling ``resume()`` — it restores the newest intact
+    checkpoint and continues; a mid-write crash is invisible because the
+    manifest commits last,
+  * elastic resharding: ``resume(mesh=...)`` re-lays-out the restored
+    host state onto any mesh via device_put with fresh NamedShardings,
+  * straggler mitigation lives in the data pipeline (bounded staleness).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch.specs import state_shardings
+from repro.launch.steps import TrainHyper, init_train_state, make_train_step
+from repro.models.sharding import ShardCtx
+from repro.train.checkpoint import CheckpointManager
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure (tests / chaos drills)."""
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    checkpoint_every: int = 50
+    async_checkpoints: bool = True
+    fail_at_step: Optional[int] = None  # injected crash AFTER this step
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        hyper: TrainHyper,
+        pipeline,  # TokenPipeline-like: .get(step) -> batch
+        ckpt: CheckpointManager,
+        *,
+        mesh=None,
+        tcfg: TrainerConfig = TrainerConfig(),
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.hyper = hyper
+        self.pipeline = pipeline
+        self.ckpt = ckpt
+        self.mesh = mesh
+        self.tcfg = tcfg
+        self.ctx = ShardCtx(mesh)
+        self.seed = seed
+        step_fn = make_train_step(cfg, self.ctx, hyper)
+        if mesh is not None:
+            self._step = jax.jit(step_fn, donate_argnums=(0,))
+        else:
+            self._step = jax.jit(step_fn, donate_argnums=(0,))
+        self.state = None
+        self.step = 0
+        self.metrics_log: list = []
+
+    # -- lifecycle -----------------------------------------------------------
+    def init(self):
+        self.state = init_train_state(
+            jax.random.key(self.seed), self.cfg, self.hyper
+        )
+        self.step = 0
+        return self
+
+    def resume(self, mesh=None) -> bool:
+        """Restore the newest checkpoint; False if none exists.
+
+        With `mesh`, re-lay-out the restored state onto that mesh
+        (elastic restart at a different topology).
+        """
+        like = jax.eval_shape(
+            lambda: init_train_state(
+                jax.random.key(self.seed), self.cfg, self.hyper
+            )
+        )
+        try:
+            host_state, step = self.ckpt.restore(like=like)
+        except FileNotFoundError:
+            return False
+        mesh = mesh or self.mesh
+        if mesh is not None:
+            sh = state_shardings(host_state, mesh)
+            host_state = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(np.asarray(x), s), host_state, sh
+            )
+        else:
+            host_state = jax.tree_util.tree_map(jax.numpy.asarray, host_state)
+        self.state = host_state
+        self.step = step
+        return True
+
+    def init_or_resume(self):
+        if not self.resume():
+            self.init()
+        return self
+
+    # -- loop -----------------------------------------------------------------
+    def train(self, num_steps: int) -> Dict[str, Any]:
+        assert self.state is not None, "call init() or resume() first"
+        t0 = time.perf_counter()
+        while self.step < num_steps:
+            batch = self.pipeline.get(self.step)
+            self.state, metrics = self._step(self.state, batch)
+            self.step += 1
+            if self.step % self.tcfg.log_every == 0 or self.step == num_steps:
+                self.metrics_log.append(
+                    {"step": self.step,
+                     "loss": float(metrics["loss"]),
+                     "grad_norm": float(metrics["grad_norm"])}
+                )
+            if self.step % self.tcfg.checkpoint_every == 0:
+                self.ckpt.save(
+                    self.step, self.state,
+                    blocking=not self.tcfg.async_checkpoints,
+                )
+            if self.tcfg.fail_at_step is not None and (
+                self.step == self.tcfg.fail_at_step
+            ):
+                raise SimulatedFailure(f"injected failure at {self.step}")
+        self.ckpt.wait()
+        return {
+            "steps": self.step,
+            "wall_s": time.perf_counter() - t0,
+            "final_loss": self.metrics_log[-1]["loss"]
+            if self.metrics_log else None,
+            "log": self.metrics_log,
+        }

@@ -1,0 +1,96 @@
+"""LRU_VSS eviction policy (§4)."""
+import numpy as np
+import pytest
+
+from repro.core.cache import CachePolicy
+from repro.core.quality import exact_psnr
+from repro.core.store import VSS
+
+
+def _fill(vss, clip, budget):
+    vss.write("v", clip, fps=30.0, codec="tvc-hi", budget_bytes=budget)
+
+
+def test_baseline_guard_protects_last_lossless_cover(vss, clip):
+    _fill(vss, clip, budget=1)  # budget below even the original's size
+    evicted = vss.cache.maybe_evict("v")
+    # the original is the only ≥τ cover: guard = +∞ on every page
+    assert evicted == []
+    out = vss.read("v", codec="rgb", cache=False).frames
+    assert exact_psnr(out, clip) >= 40.0
+
+
+def test_eviction_respects_budget_when_possible(vss, clip):
+    vss.write("v", clip, fps=30.0, codec="tvc-hi", budget_bytes=10**9)
+    vss.read("v", codec="rgb")  # large raw cached view (≥τ cover too)
+    before = vss.catalog.total_bytes("v")
+    vss.catalog.set_budget("v", before // 2)
+    vss.cache.maybe_evict("v")
+    after = vss.catalog.total_bytes("v")
+    assert after < before
+    out = vss.read("v", codec="rgb", cache=False).frames
+    assert exact_psnr(out, clip) >= 40.0  # a lossless cover survived
+
+
+def test_position_offset_prefers_run_ends(vss, clip):
+    """With equal LRU, the policy should evict run ends before middles
+    (anti-fragmentation)."""
+    vss.write("v", clip, fps=30.0, codec="tvc-hi", gop_frames=10,
+              budget_bytes=10**9)
+    vss.read("v", codec="tvc-med")  # cached view with 2 GOPs... make more
+    policy = CachePolicy()
+    seqs = policy.sequence_numbers(vss.catalog, "v")
+    by_phys = {}
+    for p in vss.catalog.physicals_for("v"):
+        gops = vss.catalog.gops_for(p.physical_id)
+        if len(gops) >= 3 and not p.is_original:
+            ends = [seqs[gops[0].gop_id], seqs[gops[-1].gop_id]]
+            mids = [seqs[g.gop_id] for g in gops[1:-1]]
+            assert min(mids) >= min(ends)
+            by_phys[p.physical_id] = True
+    # at least one multi-GOP cached view was checked
+    # (tvc-med of 60 frames @ default GOP 30 → 2 GOPs; force via raw read)
+    vss.read("v", codec="rgb")
+    seqs = policy.sequence_numbers(vss.catalog, "v")
+    checked = False
+    for p in vss.catalog.physicals_for("v"):
+        gops = vss.catalog.gops_for(p.physical_id)
+        if len(gops) >= 3:
+            ends = [seqs[gops[0].gop_id], seqs[gops[-1].gop_id]]
+            mids = [s for g in gops[1:-1]
+                    if (s := seqs[g.gop_id]) != float("inf")]
+            if mids and min(ends) != float("inf"):
+                assert min(mids) >= min(ends)
+                checked = True
+    assert checked
+
+
+def test_downsampled_view_never_counts_as_cover(vss, clip):
+    """Regression: a thumbnail view's (own-resolution) bound is ~0 but it
+    must NOT un-guard the full-resolution original — eviction would
+    otherwise destroy the only full-detail copy."""
+    vss.write("v", clip, fps=30.0, codec="tvc-hi",
+              budget_bytes=vss.catalog.total_bytes("v") * 3
+              if vss.catalog.logical_exists("v") else None)
+    vss.catalog.set_budget("v", vss.catalog.total_bytes("v") + 50_000)
+    vss.read("v", resolution=(64, 48), codec="rgb",
+             quality_eps_db=20.0)  # big raw thumbnail busts the budget
+    # full-resolution read must still be possible at lossless quality
+    out = vss.read("v", codec="rgb", cache=False).frames
+    assert out.shape == clip.shape
+    assert exact_psnr(out, clip) >= 40.0
+
+
+def test_ordinary_lru_mode(vss, clip):
+    """use_vss_offsets=False degrades to plain LRU (the paper's baseline)."""
+    vss.write("v", clip, fps=30.0, codec="tvc-hi", budget_bytes=10**9)
+    vss.read("v", codec="tvc-med")
+    policy = CachePolicy(use_vss_offsets=False)
+    seqs = policy.sequence_numbers(vss.catalog, "v")
+    finite = [s for s in seqs.values() if s != float("inf")]
+    gops = [g for p in vss.catalog.physicals_for("v")
+            for g in vss.catalog.gops_for(p.physical_id)]
+    by_id = {g.gop_id: g for g in gops}
+    for gid, s in seqs.items():
+        if s != float("inf"):
+            assert s == float(by_id[gid].lru_seq)

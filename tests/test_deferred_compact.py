@@ -1,0 +1,52 @@
+"""Deferred compression (§5.2) and compaction (§5.3)."""
+import numpy as np
+
+from repro.core import compact as C
+from repro.core.deferred import is_wrapped, unwrap_bytes, wrap_bytes
+from repro.core.store import VSS
+
+
+def test_wrap_roundtrip():
+    data = b"x" * 10000 + bytes(range(256))
+    w = wrap_bytes(data, 3)
+    assert is_wrapped(w)
+    assert unwrap_bytes(w) == data
+    assert len(w) < len(data)
+
+
+def test_deferred_activates_over_threshold(vss, clip):
+    vss.write("v", clip, fps=30.0, codec="tvc-hi", budget_bytes=3_000_000)
+    # raw read caches uncompressed views → cache fraction rises
+    vss.read("v", codec="rgb")
+    assert vss.deferred.active("v")
+    gid = vss.deferred.compress_one("v")
+    assert gid is not None
+    g = vss.catalog.get_gop(gid)
+    assert g.zwrapped
+    with open(g.path, "rb") as f:
+        assert is_wrapped(f.read())
+    # wrapped GOPs decode transparently on read
+    out = vss.read("v", codec="rgb", cache=False).frames
+    assert out.shape == clip.shape
+
+
+def test_compression_level_scales_with_usage(vss, clip):
+    vss.write("v", clip, fps=30.0, codec="tvc-hi", budget_bytes=10**8)
+    lvl_low = vss.deferred.current_level("v")
+    vss.catalog.set_budget("v", vss.catalog.total_bytes("v"))
+    lvl_high = vss.deferred.current_level("v")
+    assert lvl_high > lvl_low
+
+
+def test_compaction_merges_contiguous_views(vss, clip):
+    vss.write("v", clip, fps=30.0, codec="tvc-hi", budget_bytes=10**9)
+    vss.enable_compaction = False  # manual control
+    vss.read("v", t=(0.0, 1.0), codec="tvc-med")
+    vss.read("v", t=(1.0, 2.0), codec="tvc-med")
+    phys_before = len(vss.catalog.physicals_for("v"))
+    merged = C.compact(vss.catalog, "v", vss.root)
+    assert merged >= 1
+    assert len(vss.catalog.physicals_for("v")) < phys_before
+    # contiguous merged view serves the whole range
+    r = vss.read("v", t=(0.0, 2.0), codec="tvc-med", cache=False)
+    assert r.frames.shape[0] == 60

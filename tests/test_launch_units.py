@@ -1,0 +1,82 @@
+"""Launch-layer units that do not need the 512-device dry-run env."""
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES
+from repro.launch.specs import batch_specs, cache_specs
+from repro.models import model as M
+from repro.models.sharding import param_specs, spec_for
+
+
+def test_cell_enumeration_counts():
+    from repro.launch.dryrun import cells
+
+    all_cells = list(cells())
+    assert len(all_cells) == 64  # 32 arch×shape × 2 meshes
+    singles = [c for c in all_cells if not c[2]]
+    assert len(singles) == 32
+    long_cells = {c[0] for c in all_cells if c[1] == "long_500k"}
+    assert long_cells == {"recurrentgemma_2b", "xlstm_1_3b"}
+
+
+def test_batch_specs_per_family():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        b = batch_specs(cfg, SHAPES["train_4k"])
+        assert b["tokens"].shape == (256, 4096)
+        if cfg.family == "audio":
+            assert "frames" in b
+        if cfg.family == "vlm":
+            assert "patches" in b
+        d = batch_specs(cfg, SHAPES["decode_32k"])
+        assert d["tokens"].shape == (128, 1)
+        assert "frames" not in d and "patches" not in d
+
+
+def test_cache_specs_shapes():
+    cfg = get_config("qwen3_32b")
+    cache = cache_specs(cfg, 8, 1024)
+    k = cache["groups"]["0_attn"]["k"]
+    assert k.shape == (64, 8, 1024, 8, 128)  # (groups, B, L, Hkv, hd)
+    c8 = cache_specs(cfg, 8, 1024, kv_int8=True)
+    assert c8["groups"]["0_attn"]["k"].dtype == np.int8 or str(
+        c8["groups"]["0_attn"]["k"].dtype
+    ) == "int8"
+    assert "kscale" in c8["groups"]["0_attn"]
+
+
+def test_param_spec_rules():
+    assert spec_for("groups/0_attn/attn/wq", (64, 512, 4, 16), True)[0] is None
+    assert spec_for("embed", (1000, 64), False) == ("model", "data")
+    assert spec_for("tail_0_attn/mlp/wd", (128, 64), False) == (
+        "model", "data",
+    )
+    assert spec_for("final_norm/scale", (64,), False) == (None,)
+
+
+def test_abstract_init_matches_real_init():
+    from repro.configs import smoke_config
+
+    cfg = smoke_config("recurrentgemma-2b")
+    abstract = M.init_model_abstract(cfg)
+    real = M.init_model(jax.random.key(0), cfg)
+    ta = jax.tree_util.tree_map(lambda x: (x.shape, str(x.dtype)), abstract)
+    tr = jax.tree_util.tree_map(lambda x: (x.shape, str(x.dtype)), real)
+    assert ta == tr
+
+
+def test_roofline_math():
+    from repro.launch.roofline import Roofline
+
+    r = Roofline(
+        flops_per_chip=197e12,  # exactly one second of compute
+        hbm_bytes_per_chip=819e9 / 2,
+        ici_bytes_per_chip=0.0,
+        model_flops_total=197e12 * 256 / 2,  # half the compiled flops useful
+        chips=256,
+    )
+    assert r.dominant == "compute"
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.useful_flops_fraction - 0.5) < 1e-9
+    assert abs(r.roofline_fraction - 0.5) < 1e-9

@@ -1,0 +1,179 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + NaN assertions, prefill/decode parity with the parallel pass."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models import model as M
+from repro.models.sharding import ShardCtx
+
+CTX = ShardCtx(None)
+B, S = 2, 24
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, cfg.num_frontend_tokens, cfg.frontend_dim)
+        )
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            ks[2], (B, cfg.num_frontend_tokens, cfg.frontend_dim)
+        )
+    return batch
+
+
+def _smoke_cfg(arch):
+    cfg = smoke_config(arch)
+    if cfg.moe is not None:
+        # forward drops tokens at expert capacity; decode never does —
+        # lift capacity so the parity check isolates real bugs
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+        )
+    return cfg
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_grad(arch):
+    cfg = _smoke_cfg(arch)
+    params = M.init_model(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1))
+    logits, aux = jax.jit(lambda p, b: M.forward(p, cfg, b, CTX))(
+        params, batch
+    )
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    loss, grads = jax.jit(
+        jax.value_and_grad(lambda p: M.loss_fn(p, cfg, batch, CTX))
+    )(params)
+    assert np.isfinite(float(loss))
+    gnorm = jnp.sqrt(sum(
+        (g.astype(jnp.float32) ** 2).sum()
+        for g in jax.tree_util.tree_leaves(grads)
+    ))
+    assert float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_parity(arch):
+    cfg = _smoke_cfg(arch)
+    params = M.init_model(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1))
+    logits, _ = jax.jit(lambda p, b: M.forward(p, cfg, b, CTX))(params, batch)
+    cache = M.init_cache(cfg, B, max_len=S + 8)
+    pre = dict(batch, tokens=batch["tokens"][:, : S - 1])
+    lg_pre, cache = jax.jit(lambda p, b, c: M.prefill(p, cfg, b, c, CTX))(
+        params, pre, cache
+    )
+    lg_dec, cache = jax.jit(lambda p, c, t: M.decode_step(p, cfg, c, t, CTX))(
+        params, cache, batch["tokens"][:, S - 1:]
+    )
+    full = np.asarray(logits, np.float32)
+    np.testing.assert_allclose(
+        np.asarray(lg_pre[:, 0], np.float32), full[:, -2], atol=0.35
+    )
+    dec = np.asarray(lg_dec[:, 0], np.float32)
+    if cfg.moe is not None:
+        # top-k routing is discontinuous: under decode-path bf16
+        # rounding a knife-edge token (measured top-2 router gap 0.003
+        # for llama4 at this seed) can legitimately flip experts, moving
+        # that row's logits a lot. Require the bulk of logits to agree —
+        # a genuinely broken decode path agrees on ~none of them.
+        assert (np.abs(dec - full[:, -1]) < 0.35).mean() > 0.6
+    else:
+        np.testing.assert_allclose(dec, full[:, -1], atol=0.35)
+    assert int(cache["pos"][0]) == S
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_numbers_match_brief(arch):
+    """The full configs must carry the exact published dimensions."""
+    expect = {
+        "phi3_mini_3_8b": (32, 3072, 32, 32, 8192, 32064),
+        "minitron_4b": (32, 3072, 24, 8, 9216, 256000),
+        "command_r_plus_104b": (64, 12288, 96, 8, 33792, 256000),
+        "qwen3_32b": (64, 5120, 64, 8, 25600, 151936),
+        "whisper_large_v3": (32, 1280, 20, 20, 5120, 51866),
+        "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+        "deepseek_moe_16b": (28, 2048, 16, 16, 1408, 102400),
+        "llama4_scout_17b_a16e": (48, 5120, 40, 8, 8192, 202048),
+        "llama_3_2_vision_11b": (40, 4096, 32, 8, 14336, 128256),
+        "xlstm_1_3b": (48, 2048, 4, 4, 0, 50304),
+    }[arch]
+    cfg = get_config(arch)
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expect
+
+
+def test_moe_specs():
+    d = get_config("deepseek_moe_16b")
+    assert (d.moe.num_experts, d.moe.top_k, d.moe.num_shared) == (64, 6, 2)
+    l4 = get_config("llama4_scout_17b_a16e")
+    assert (l4.moe.num_experts, l4.moe.top_k) == (16, 1)
+
+
+def test_long_context_only_for_sub_quadratic():
+    from repro.configs.base import shapes_for
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        names = {s.name for s in shapes_for(cfg)}
+        if arch in ("recurrentgemma_2b", "xlstm_1_3b"):
+            assert "long_500k" in names
+        else:
+            assert "long_500k" not in names
+
+
+def test_int8_kv_view_decode_parity():
+    """§4 multi-representation cached views applied to KV: the int8 view
+    must agree with full-precision decode on argmax and closely on
+    logits (phi3 smoke)."""
+    cfg = _smoke_cfg("phi3_mini_3_8b")
+    params = M.init_model(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0,
+                                cfg.vocab_size)
+    logits, _ = jax.jit(lambda p, b: M.forward(p, cfg, b, CTX))(
+        params, {"tokens": tokens}
+    )
+    cache = M.init_cache(cfg, B, max_len=S + 4, kv_int8=True)
+    assert cache["groups"]["0_attn"]["k"].dtype == jnp.int8
+    _, cache = jax.jit(lambda p, b, c: M.prefill(p, cfg, b, c, CTX))(
+        params, {"tokens": tokens[:, : S - 1]}, cache
+    )
+    lgd, _ = jax.jit(lambda p, c, t: M.decode_step(p, cfg, c, t, CTX))(
+        params, cache, tokens[:, S - 1:]
+    )
+    ref = np.asarray(logits[:, -1], np.float32)
+    got = np.asarray(lgd[:, 0], np.float32)
+    assert np.abs(got - ref).max() < 0.5
+    assert (got.argmax(-1) == ref.argmax(-1)).all()
+
+
+def test_mlstm_prefill_state_matches_step_chain():
+    """Closed-form prefill state == unrolled single-step recurrence."""
+    from repro.models import recurrent as R
+
+    cfg = R.MLstmCfg(d_model=32, num_heads=2)
+    params = R.init_mlstm(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 12, 32), jnp.float32)
+    _, state_par = R.mlstm_block_prefill(params, x, cfg, CTX)
+    state_seq = R.mlstm_init_state(2, cfg, dtype=jnp.float32)
+    for t in range(12):
+        state_seq, _ = R.mlstm_block_step(params, state_seq, x[:, t], cfg, CTX)
+    np.testing.assert_allclose(
+        np.asarray(state_par["C"]), np.asarray(state_seq["C"]), atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(state_par["m"]), np.asarray(state_seq["m"]), atol=1e-5
+    )

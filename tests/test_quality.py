@@ -1,0 +1,60 @@
+"""Quality model (§3.2): the transitive MSE bound and admission logic."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.quality import QualityEstimator, exact_mse, exact_psnr
+from repro.core.types import chain_mse_bound, mse_to_psnr, psnr_to_mse
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_transitive_mse_bound_property(seed):
+    """Paper §3.2: MSE(f0,f2) ≤ 2·(MSE(f0,f1) + MSE(f1,f2)) — checked on
+    random transformation chains f0 → f1 → f2."""
+    rng = np.random.default_rng(seed)
+    f0 = rng.integers(0, 256, (2, 16, 16, 3)).astype(np.float32)
+    f1 = np.clip(f0 + rng.normal(0, rng.uniform(1, 30), f0.shape), 0, 255)
+    f2 = np.clip(f1 + rng.normal(0, rng.uniform(1, 30), f0.shape), 0, 255)
+    lhs = exact_mse(f0, f2)
+    rhs = 2.0 * (exact_mse(f0, f1) + exact_mse(f1, f2))
+    assert lhs <= rhs + 1e-3
+
+
+def test_chain_bound_exact_for_direct_child():
+    assert chain_mse_bound(0.0, 7.5, parent_is_original=True) == 7.5
+    assert chain_mse_bound(3.0, 7.5, parent_is_original=False) == 21.0
+
+
+@given(st.floats(1.0, 300.0))
+@settings(deadline=None)
+def test_psnr_mse_roundtrip(db):
+    assert abs(mse_to_psnr(psnr_to_mse(db)) - db) < 1e-6
+
+
+def test_requested_downsample_not_charged():
+    """u is loss *relative to serving from m0*: a requested downsample is
+    the ideal answer and must not fail admission (§3.2 semantics)."""
+    q = QualityEstimator()
+    assert q.resample_mse(1.0, 0.5) == 0.0  # downsample: requested
+    assert q.resample_mse(0.5, 1.0) > 0.0  # upsample: detail is gone
+    assert q.admissible(
+        0.0, True, scale_from=1.0, scale_to=0.25, out_codec="tvc-hi",
+        eps_db=40.0,
+    )
+    assert not q.admissible(
+        0.0, True, scale_from=0.125, scale_to=1.0, out_codec="rgb",
+        eps_db=40.0,
+    )
+
+
+def test_compression_estimate_refined_by_observation():
+    q = QualityEstimator()
+    seed = q.compression_mse("tvc-med")
+    q.observe_compression("tvc-med", seed * 3)
+    assert q.compression_mse("tvc-med") > seed
+
+
+def test_exact_psnr_identity():
+    a = np.zeros((1, 4, 4, 3), np.uint8)
+    assert exact_psnr(a, a) == float("inf")

@@ -1,0 +1,75 @@
+"""Fragment selection (§3.1): DP exactness vs brute force and Z3."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.select import (
+    SegmentChoice,
+    SelectionProblem,
+    replay_cost,
+    solve_brute,
+    solve_dp,
+    solve_greedy,
+    solve_z3,
+)
+
+
+@st.composite
+def problems(draw):
+    n_seg = draw(st.integers(1, 5))
+    n_vid = draw(st.integers(1, 4))
+    choices = []
+    for _ in range(n_seg):
+        k = draw(st.integers(1, n_vid))
+        vids = draw(
+            st.lists(st.integers(0, n_vid - 1), min_size=k, max_size=k,
+                     unique=True)
+        )
+        chs = [
+            SegmentChoice(
+                v,
+                draw(st.floats(0, 100, allow_nan=False)),
+                draw(st.floats(0, 50, allow_nan=False)),
+            )
+            for v in vids
+        ]
+        choices.append(chs)
+    segs = [(float(i), float(i + 1)) for i in range(n_seg)]
+    return SelectionProblem(segs, choices)
+
+
+@given(problems())
+@settings(max_examples=150, deadline=None)
+def test_dp_matches_brute_force(p):
+    dp = solve_dp(p)
+    brute = solve_brute(p)
+    assert abs(dp.cost - brute.cost) < 1e-6
+    assert abs(replay_cost(p, dp.assignment) - dp.cost) < 1e-6
+
+
+@given(problems())
+@settings(max_examples=25, deadline=None)
+def test_z3_matches_dp(p):
+    z = solve_z3(p)
+    dp = solve_dp(p)
+    assert abs(z.cost - dp.cost) < 1e-5  # same optimum (ties may differ)
+
+
+@given(problems())
+@settings(max_examples=100, deadline=None)
+def test_greedy_never_beats_optimal(p):
+    g = solve_greedy(p)
+    dp = solve_dp(p)
+    assert g.cost >= dp.cost - 1e-9
+
+
+def test_lookback_waived_on_continuation():
+    """Choosing the same video across adjacent segments pays c_l once."""
+    chs = [
+        [SegmentChoice(0, 10.0, 5.0), SegmentChoice(1, 9.0, 50.0)],
+        [SegmentChoice(0, 10.0, 5.0), SegmentChoice(1, 9.0, 50.0)],
+    ]
+    p = SelectionProblem([(0.0, 1.0), (1.0, 2.0)], chs)
+    best = solve_dp(p)
+    # video 1 is cheaper per-segment but pays a huge entry cost; staying
+    # on video 0 (10+5+10) beats entering video 1 (9+50+9)
+    assert [chs[i][a].video_idx for i, a in enumerate(best.assignment)] == [0, 0]

@@ -1,0 +1,111 @@
+"""Integration tests for the VSS storage manager (paper §2–§3 behaviour)."""
+import numpy as np
+import pytest
+
+from repro.core.quality import exact_psnr
+from repro.core.store import VSS
+
+
+def test_write_read_roundtrip_lossless(vss, clip):
+    vss.write("v", clip, fps=30.0, codec="tvc-ll")
+    out = vss.read("v", codec="rgb", cache=False).frames
+    assert out.shape == clip.shape
+    assert np.array_equal(out, clip)  # tvc-ll is bit-exact
+
+
+@pytest.mark.parametrize("codec,min_db", [
+    ("tvc-hi", 48.0), ("tvc-med", 38.0), ("tvc-lo", 28.0),
+])
+def test_tier_quality(vss, clip, codec, min_db):
+    vss.write("v", clip, fps=30.0, codec=codec)
+    out = vss.read("v", codec="rgb", cache=False).frames
+    assert exact_psnr(out, clip) >= min_db
+
+
+def test_temporal_range_read(vss, clip):
+    vss.write("v", clip, fps=30.0, codec="tvc-hi")
+    r = vss.read("v", t=(0.5, 1.5), codec="rgb", cache=False)
+    assert r.frames.shape[0] == 30
+    ref = vss.read("v", codec="rgb", cache=False).frames[15:45]
+    assert np.array_equal(r.frames, ref)
+
+
+def test_roi_and_resolution(vss, clip):
+    vss.write("v", clip, fps=30.0, codec="tvc-hi")
+    r = vss.read("v", roi=(32, 16, 96, 80), codec="rgb", cache=False)
+    assert r.frames.shape[1:3] == (64, 64)
+    r2 = vss.read("v", resolution=(64, 48), codec="rgb", cache=False)
+    assert r2.frames.shape[1:3] == (48, 64)
+
+
+def test_fps_division(vss, clip):
+    vss.write("v", clip, fps=30.0, codec="tvc-hi")
+    r = vss.read("v", fps=15.0, codec="rgb", cache=False)
+    assert r.frames.shape[0] == 30
+    with pytest.raises(RuntimeError):
+        vss.read("v", fps=45.0, codec="rgb", cache=False)  # non-integer ratio
+
+
+def test_read_outside_interval_rejected(vss, clip):
+    vss.write("v", clip, fps=30.0, codec="tvc-hi")
+    with pytest.raises(ValueError):
+        vss.read("v", t=(1.0, 3.0), codec="rgb")
+
+
+def test_no_overwrite_policy(vss, clip):
+    vss.write("v", clip, fps=30.0)
+    with pytest.raises(ValueError):
+        vss.write("v", clip, fps=30.0)
+
+
+def test_streaming_prefix_read(vss, clip):
+    w = vss.writer("v", fps=30.0, codec="tvc-hi", gop_frames=15)
+    w.append(clip[:30])  # two GOPs land
+    r = vss.read("v", t=(0.0, 1.0), codec="rgb", cache=False)
+    assert r.frames.shape[0] == 30
+    w.append(clip[30:])
+    w.close()
+    r = vss.read("v", codec="rgb", cache=False)
+    assert r.frames.shape[0] == 60
+
+
+def test_cached_views_speed_up_plans(vss, clip):
+    """After a cached read, later overlapping reads select cached fragments."""
+    vss.write("v", clip, fps=30.0, codec="tvc-hi")
+    r1 = vss.read("v", t=(0.5, 1.5), codec="tvc-med")  # cached as a view
+    assert vss.stats("v")["physical_videos"] >= 2
+    r2 = vss.read("v", t=(0.5, 1.5), codec="tvc-med", cache=False)
+    # the cached tvc-med view should be chosen (same-codec fragments are
+    # cheaper than transcoding the tvc-hi original)
+    chosen = {c.video_idx for c in r2.plan.selection.chosen(r2.plan.problem)}
+    codecs = {r2.plan.runs[i].physical.codec for i in chosen}
+    assert "tvc-med" in codecs
+
+
+def test_format_flexibility_any_to_any(vss, clip):
+    vss.write("v", clip, fps=30.0, codec="h264")  # alias → tvc-med
+    for out_codec in ("rgb", "hevc", "tvc-lo", "h264"):
+        r = vss.read("v", codec=out_codec, cache=False,
+                     quality_eps_db=20.0)
+        assert r.frames.shape == clip.shape
+
+
+def test_quality_cutoff_rejects_lossy_cache(vss, clip):
+    vss.write("v", clip, fps=30.0, codec="tvc-ll")
+    vss.read("v", codec="tvc-lo")  # caches a low-quality view
+    r = vss.read("v", codec="rgb", quality_eps_db=45.0, cache=False)
+    chosen = {c.video_idx for c in r.plan.selection.chosen(r.plan.problem)}
+    for i in chosen:  # strict cutoff must avoid the tvc-lo view
+        assert r.plan.runs[i].physical.codec != "tvc-lo"
+
+
+def test_budget_eviction_keeps_lossless_cover(vss, clip):
+    vss.write("v", clip, fps=30.0, codec="tvc-hi",
+              budget_bytes=6_000_000)
+    for t0 in (0.0, 0.5, 1.0):
+        vss.read("v", t=(t0, t0 + 1.0), codec="rgb")  # big raw views
+    # budget enforced (at least nothing unbounded) and a lossless cover
+    # still reproduces the original
+    out = vss.read("v", codec="rgb", cache=False).frames
+    assert out.shape == clip.shape
+    assert exact_psnr(out, clip) >= 40.0
