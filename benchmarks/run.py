@@ -25,6 +25,7 @@ MODULES = (
     "fig19_joint_overhead",
     "fig20_zstd_read",
     "fig21_end_to_end",
+    "fig22_backend_scaling",
     "table2_joint_quality",
     "roofline",
 )

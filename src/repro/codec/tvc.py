@@ -29,11 +29,16 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import zlib
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
-import zstandard
+
+try:  # optional: the entropy stage prefers zstd, falls back to zlib
+    import zstandard
+except ImportError:  # pragma: no cover - environment-dependent
+    zstandard = None
 
 from repro.kernels import ops
 
@@ -116,12 +121,29 @@ class EncodedGOP:
         return 8.0 * self.nbytes / max(self.pixels, 1)
 
 
+# zstd frames open with a fixed magic; a zlib stream's 2-byte header
+# (CMF/FLG) can never alias it because 0x28,0xB5 fails zlib's FCHECK —
+# so the payload itself flags which entropy codec produced it and mixed
+# environments (written with the wheel, read without, or vice versa)
+# round-trip.
+_ZSTD_FRAME_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
 def _zstd(data: bytes, level: int) -> bytes:
-    return zstandard.ZstdCompressor(level=level).compress(data)
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(data)
+    return zlib.compress(data, min(max(level, 1), 9))
 
 
 def _unzstd(data: bytes) -> bytes:
-    return zstandard.ZstdDecompressor().decompress(data)
+    if data[:4] == _ZSTD_FRAME_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "GOP payload is zstd-compressed but the zstandard wheel"
+                " is not installed"
+            )
+        return zstandard.ZstdDecompressor().decompress(data)
+    return zlib.decompress(data)
 
 
 def encode_gop(

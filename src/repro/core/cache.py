@@ -18,7 +18,6 @@ Defaults γ=2, ζ=1, τ=40 dB, exactly the prototype's.
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.catalog import Catalog
@@ -131,9 +130,11 @@ class CacheManager:
     """Budget enforcement: evict lowest-sequence GOP pages until within
     the per-logical-video storage budget (set at creation, §4)."""
 
-    def __init__(self, catalog: Catalog, policy: Optional[CachePolicy] = None):
+    def __init__(self, catalog: Catalog, policy: Optional[CachePolicy] = None,
+                 *, backend=None):
         self.catalog = catalog
         self.policy = policy or CachePolicy()
+        self.backend = backend  # StorageBackend owning the GOP payloads
 
     def over_budget_bytes(self, logical: str) -> int:
         return self.catalog.total_bytes(logical) - self.catalog.get_budget(
@@ -176,13 +177,7 @@ class CacheManager:
             if len(refs) <= 1:
                 rec = self.catalog.get_joint(g.joint_ref)
                 for seg in rec.get("segments", []):
-                    for p in seg["paths"].values():
-                        try:
-                            os.unlink(p)
-                        except FileNotFoundError:
-                            pass
+                    for key in seg["paths"].values():
+                        self.backend.delete(key)
             return
-        try:
-            os.unlink(g.path)
-        except FileNotFoundError:
-            pass
+        self.backend.delete(g.path)

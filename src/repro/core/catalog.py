@@ -62,6 +62,7 @@ CREATE TABLE IF NOT EXISTS joint (
 );
 CREATE TABLE IF NOT EXISTS counters (name TEXT PRIMARY KEY, value INTEGER);
 INSERT OR IGNORE INTO counters VALUES ('lru_clock', 0);
+CREATE TABLE IF NOT EXISTS meta (name TEXT PRIMARY KEY, value TEXT);
 """
 
 
@@ -126,16 +127,35 @@ class Catalog:
 
     def drop_logical(self, name: str) -> List[str]:
         """Delete a logical video and all its physical/GOP rows; returns
-        the orphaned GOP object paths for the caller to unlink."""
+        the orphaned GOP object keys for the caller to delete from the
+        storage backend.  Joint-compression records are dropped (and
+        their segment object keys returned) only when no GOP outside
+        this logical still references them — the partner side of a
+        joint pair keeps reading through the shared pieces."""
         with self._lock:
-            paths = [
-                r[0]
-                for r in self._conn.execute(
-                    "SELECT g.path FROM gop g JOIN physical p ON"
-                    " g.physical_id = p.id WHERE p.logical=?",
-                    (name,),
-                ).fetchall()
-            ]
+            rows = self._conn.execute(
+                "SELECT g.id, g.path, g.joint_ref FROM gop g JOIN physical p"
+                " ON g.physical_id = p.id WHERE p.logical=?",
+                (name,),
+            ).fetchall()
+            dropped_ids = {r[0] for r in rows}
+            # joint-ref GOPs own no object of their own (the payload
+            # lives in the joint record's segment objects)
+            paths = [r[1] for r in rows if r[2] is None]
+            for jid in {r[2] for r in rows if r[2] is not None}:
+                refs = {
+                    r[0]
+                    for r in self._conn.execute(
+                        "SELECT id FROM gop WHERE joint_ref=?", (jid,)
+                    ).fetchall()
+                }
+                if refs <= dropped_ids:  # last referent: free the pieces
+                    segments = self._conn.execute(
+                        "SELECT segments FROM joint WHERE id=?", (jid,)
+                    ).fetchone()[0]
+                    for seg in json.loads(segments or "[]"):
+                        paths.extend(seg.get("paths", {}).values())
+                    self._conn.execute("DELETE FROM joint WHERE id=?", (jid,))
             self._conn.execute(
                 "DELETE FROM gop WHERE physical_id IN"
                 " (SELECT id FROM physical WHERE logical=?)",
@@ -326,6 +346,66 @@ class Catalog:
             return self._conn.execute(
                 "SELECT value FROM counters WHERE name='lru_clock'"
             ).fetchone()[0]
+
+    # -- store metadata (layout stamp, shutdown marker) --------------------
+    def get_meta(self, name: str) -> Optional[str]:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT value FROM meta WHERE name=?", (name,)
+            ).fetchone()
+        return row[0] if row else None
+
+    def set_meta(self, name: str, value: str) -> None:
+        with self._lock:
+            self._conn.execute(
+                "INSERT INTO meta(name, value) VALUES (?,?)"
+                " ON CONFLICT(name) DO UPDATE SET value=excluded.value",
+                (name, value),
+            )
+            self._conn.commit()
+
+    def any_gops(self) -> bool:
+        with self._lock:
+            return self._conn.execute(
+                "SELECT 1 FROM gop LIMIT 1"
+            ).fetchone() is not None
+
+    def all_gops(self) -> List[GopMeta]:
+        """Every GOP row across every logical video (startup scavenger)."""
+        with self._lock:
+            rows = self._conn.execute(
+                f"SELECT {_GOP_COLS} FROM gop ORDER BY id"
+            ).fetchall()
+        return [_gop_from_row(r) for r in rows]
+
+    def all_joint_segment_paths(self) -> List[str]:
+        """Object keys owned by joint-compression records (scavenger)."""
+        with self._lock:
+            rows = self._conn.execute("SELECT segments FROM joint").fetchall()
+        out: List[str] = []
+        for (segments,) in rows:
+            for seg in json.loads(segments or "[]"):
+                out.extend(seg.get("paths", {}).values())
+        return out
+
+    def lru_for_paths(self, paths: Sequence[str]) -> dict:
+        """{object key: lru_seq} for the given keys — the hook that lets
+        the tiered backend order hot-tier spill by LRU_VSS sequence
+        numbers without owning any policy itself."""
+        out: dict = {}
+        if not paths:
+            return out
+        chunk = 500  # SQLite parameter limit headroom
+        with self._lock:
+            for i in range(0, len(paths), chunk):
+                part = list(paths[i : i + chunk])
+                marks = ",".join("?" * len(part))
+                rows = self._conn.execute(
+                    f"SELECT path, lru_seq FROM gop WHERE path IN ({marks})",
+                    part,
+                ).fetchall()
+                out.update(rows)
+        return out
 
     def total_bytes(self, logical: str) -> int:
         with self._lock:

@@ -5,12 +5,12 @@ with contiguous time and identical spatial/physical configuration, e.g.
 entries at [0, 90) and [90, 120). Read planning is (in the worst case)
 exponential in fragment count, so VSS periodically and non-quiescently
 merges each contiguous pair into a unified representation: the second
-video's GOP objects are hard-linked into the first's directory, the
-catalog rows are moved, and the second video is dropped.
+video's GOP objects are re-keyed under the first video (copy-on-merge
+through the storage backend — backends need no rename/link primitive),
+the catalog rows are moved, and the second video is dropped.
 """
 from __future__ import annotations
 
-import os
 from typing import List, Tuple
 
 from repro.core.catalog import Catalog
@@ -38,7 +38,7 @@ def _compatible(a: PhysicalMeta, b: PhysicalMeta, tol: float) -> bool:
     )
 
 
-def compact_once(catalog: Catalog, logical: str, root: str) -> int:
+def compact_once(catalog: Catalog, logical: str, backend) -> int:
     """Merge one contiguous pair; returns number of pairs merged (0/1)."""
     physicals = sorted(
         catalog.physicals_for(logical), key=lambda p: (p.t_start, p.t_end)
@@ -50,41 +50,39 @@ def compact_once(catalog: Catalog, logical: str, root: str) -> int:
                 continue
             if not _compatible(a, b, tol):
                 continue
-            _merge(catalog, a, b, root)
+            _merge(catalog, a, b, backend)
             return 1
     return 0
 
 
-def compact(catalog: Catalog, logical: str, root: str, max_pairs: int = 64) -> int:
+def compact(catalog: Catalog, logical: str, backend, max_pairs: int = 64) -> int:
     total = 0
     for _ in range(max_pairs):
-        merged = compact_once(catalog, logical, root)
+        merged = compact_once(catalog, logical, backend)
         if not merged:
             break
         total += merged
     return total
 
 
-def _merge(catalog: Catalog, a: PhysicalMeta, b: PhysicalMeta, root: str):
-    """Append b's GOPs to a (hard links, then remove the originals)."""
+def _merge(catalog: Catalog, a: PhysicalMeta, b: PhysicalMeta, backend):
+    """Append b's GOPs to a (re-key objects, then drop b's copies §5.3)."""
     a_gops = catalog.gops_for(a.physical_id)
     b_gops = catalog.gops_for(b.physical_id)
     next_idx = (max(g.index for g in a_gops) + 1) if a_gops else 0
     frame_offset = int(round((b.t_start - a.t_start) * a.fps))
-    a_dir = os.path.join(root, a.logical, str(a.physical_id))
-    os.makedirs(a_dir, exist_ok=True)
     for j, g in enumerate(b_gops):
-        new_path = os.path.join(a_dir, f"{next_idx + j}.tvc")
-        # hard link into the first video, then drop the second copy (§5.3)
-        if os.path.exists(new_path):
-            os.unlink(new_path)
-        os.link(g.path, new_path)
+        new_key = f"{a.logical}/{a.physical_id}/{next_idx + j}.tvc"
+        # publish under the merged key first, then retire the old key —
+        # a crash in between leaves an orphan for the scavenger, never a
+        # dangling catalog row
+        backend.put(new_key, backend.get(g.path))
         catalog.add_gop(
             a.physical_id, next_idx + j, frame_offset + g.start_frame,
-            g.num_frames, g.nbytes, new_path, lru_seq=g.lru_seq,
+            g.num_frames, g.nbytes, new_key, lru_seq=g.lru_seq,
         )
-        os.unlink(g.path)
         catalog.delete_gop(g.gop_id)
+        backend.delete(g.path)
     catalog.extend_physical_time(a.physical_id, b.t_end)
     if b.mse_bound > a.mse_bound:
         catalog.set_physical_bound(a.physical_id, b.mse_bound)

@@ -15,33 +15,46 @@ shrinking it pays off most). Two further prototype behaviours are kept:
 """
 from __future__ import annotations
 
-import os
 import threading
+import zlib
 from typing import List, Optional
 
-import zstandard
+try:  # optional: prefer zstd, fall back to stdlib zlib
+    import zstandard
+except ImportError:  # pragma: no cover - environment-dependent
+    zstandard = None
 
 from repro.core.cache import CachePolicy
 from repro.core.catalog import Catalog
 from repro.core.types import GopMeta
 
 ACTIVATION_FRACTION = 0.25
-ZMAGIC = b"ZGOP"
+ZMAGIC = b"ZGOP"  # zstd-wrapped
+LMAGIC = b"LGOP"  # zlib-wrapped (no zstandard wheel available)
 MIN_LEVEL, MAX_LEVEL = 1, 19
 
 
 def wrap_bytes(data: bytes, level: int) -> bytes:
-    return ZMAGIC + zstandard.ZstdCompressor(level=level).compress(data)
+    if zstandard is not None:
+        return ZMAGIC + zstandard.ZstdCompressor(level=level).compress(data)
+    return LMAGIC + zlib.compress(data, min(max(level, 1), 9))
 
 
 def unwrap_bytes(data: bytes) -> bytes:
-    if data[:4] != ZMAGIC:
-        raise ValueError("not a deferred-compressed GOP")
-    return zstandard.ZstdDecompressor().decompress(data[4:])
+    if data[:4] == ZMAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "GOP was zstd-wrapped but the zstandard wheel is not"
+                " installed"
+            )
+        return zstandard.ZstdDecompressor().decompress(data[4:])
+    if data[:4] == LMAGIC:
+        return zlib.decompress(data[4:])
+    raise ValueError("not a deferred-compressed GOP")
 
 
 def is_wrapped(data: bytes) -> bool:
-    return data[:4] == ZMAGIC
+    return data[:4] in (ZMAGIC, LMAGIC)
 
 
 class DeferredCompressor:
@@ -50,9 +63,12 @@ class DeferredCompressor:
         catalog: Catalog,
         policy: Optional[CachePolicy] = None,
         activation_fraction: float = ACTIVATION_FRACTION,
+        *,
+        backend=None,  # StorageBackend; required for compress_one
     ):
         self.catalog = catalog
         self.policy = policy or CachePolicy()
+        self.backend = backend
         self.activation_fraction = activation_fraction
         self._lock = threading.Lock()
         self._bg_thread: Optional[threading.Thread] = None
@@ -93,17 +109,16 @@ class DeferredCompressor:
             seqs = self.policy.sequence_numbers(self.catalog, logical)
             target = max(raw, key=lambda g: seqs.get(g.gop_id, 0.0))
             level = self.current_level(logical)
-            with open(target.path, "rb") as f:
-                data = f.read()
+            data = self.backend.get(target.path)
             if is_wrapped(data):
                 return None
             wrapped = wrap_bytes(data, level)
             if len(wrapped) >= len(data):
                 return None  # incompressible; leave it
-            tmp = target.path + ".tmp"
-            with open(tmp, "wb") as f:
-                f.write(wrapped)
-            os.replace(tmp, target.path)
+            # backend puts are atomic (publish-then-index protocol): a
+            # crash here at worst leaves a wrapped object with a stale
+            # catalog size, which the startup scavenger repairs
+            self.backend.put(target.path, wrapped)
             self.catalog.update_gop(
                 target.gop_id, nbytes=len(wrapped), zwrapped=True
             )

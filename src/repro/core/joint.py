@@ -24,7 +24,6 @@ GOPs re-project the composite through H and append the right slice.
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -304,21 +303,19 @@ def jointly_compress_gops(
     pa = cat.get_physical(ga.physical_id)
     codec_name = pa.codec if pa.codec != "rgb" else "tvc-hi"
 
-    jdir = os.path.join(store.root, "_joint")
-    os.makedirs(jdir, exist_ok=True)
-
     if res.duplicate:
         joint_id = cat.add_joint(
             gop_a_id, gop_b_id, merge, [], nbytes=0, duplicate=True,
             g_scale=g_scale,
         )
         # b's pixels are freed; it becomes a pointer to a
-        os.unlink(gb.path)
+        store.backend.delete(gb.path)
         cat.update_gop(gop_b_id, joint_ref=joint_id, nbytes=0)
         return joint_id
 
     seg_meta = []
     total_bytes = 0
+    a_bytes = 0
     joint_id = cat.add_joint(
         gop_a_id, gop_b_id, merge, [], nbytes=0, g_scale=g_scale
     )
@@ -330,12 +327,13 @@ def jointly_compress_gops(
         ):
             enc = _codec.encode_gop(arr, codec_name,
                                     use_pallas=store.use_pallas)
-            path = os.path.join(jdir, f"{joint_id}_s{k}_{part_name}.tvc")
+            key = f"_joint/{joint_id}_s{k}_{part_name}.tvc"
             data = _codec.serialize_gop(enc)
-            with open(path, "wb") as fh:
-                fh.write(data)
-            paths[part_name] = path
+            store.backend.put(key, data)
+            paths[part_name] = key
             total_bytes += len(data)
+            if part_name in ("left", "overlap"):
+                a_bytes += len(data)
         seg_meta.append(
             {
                 "start": seg.start,
@@ -352,16 +350,11 @@ def jointly_compress_gops(
             (__import__("json").dumps(seg_meta), total_bytes, joint_id),
         )
         cat._conn.commit()
-    # original GOP files are replaced by the joint pieces; byte accounting
-    # assigns left+overlap to a, right to b
-    a_bytes = sum(
-        os.path.getsize(s["paths"]["left"])
-        + os.path.getsize(s["paths"]["overlap"])
-        for s in seg_meta
-    )
+    # original GOP objects are replaced by the joint pieces; byte
+    # accounting assigns left+overlap to a, right to b
     b_bytes = total_bytes - a_bytes
-    os.unlink(ga.path)
-    os.unlink(gb.path)
+    store.backend.delete(ga.path)
+    store.backend.delete(gb.path)
     cat.update_gop(gop_a_id, joint_ref=joint_id, nbytes=a_bytes)
     cat.update_gop(gop_b_id, joint_ref=joint_id, nbytes=b_bytes)
     return joint_id
@@ -387,25 +380,24 @@ def reconstruct_gop(store, gop) -> np.ndarray:
         return frames
     pieces = []
     for seg in rec["segments"]:
-        enc_l = _codec.deserialize_gop(open(seg["paths"]["left"], "rb").read())
-        enc_o = _codec.deserialize_gop(
-            open(seg["paths"]["overlap"], "rb").read()
-        )
-        left = _codec.decode_gop(enc_l, use_pallas=store.use_pallas)
-        over = _codec.decode_gop(enc_o, use_pallas=store.use_pallas)
+        parts = ["left", "overlap"] if side_a else ["left", "overlap",
+                                                    "right"]
+        blobs = store.backend.batch_get([seg["paths"][p] for p in parts])
+        decoded = {
+            p: _codec.decode_gop(_codec.deserialize_gop(b),
+                                 use_pallas=store.use_pallas)
+            for p, b in zip(parts, blobs)
+        }
+        left, over = decoded["left"], decoded["overlap"]
         h = np.asarray(seg["h"], np.float64).reshape(3, 3).astype(np.float32)
         if side_a:
             pieces.append(np.concatenate([left, over], axis=2))
         else:
-            enc_r = _codec.deserialize_gop(
-                open(seg["paths"]["right"], "rb").read()
-            )
-            right = _codec.decode_gop(enc_r, use_pallas=store.use_pallas)
             f_comp = np.concatenate([left, over], axis=2)
             g_over = warp_frames(
                 f_comp, h, out_hw=(f_comp.shape[1], seg["x_g"])
             )
-            pieces.append(np.concatenate([g_over, right], axis=2))
+            pieces.append(np.concatenate([g_over, decoded["right"]], axis=2))
     frames = np.concatenate(pieces, axis=0)
     if not side_a and rec["g_scale"] != 1.0:
         s = rec["g_scale"]

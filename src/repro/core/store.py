@@ -12,6 +12,12 @@ Writes are streaming and non-blocking: ``writer()`` returns a handle
 whose flushed GOPs become immediately queryable (prefix reads of a video
 still being written are supported); visibility of the *final* GOP is
 only guaranteed after ``close()``, matching the paper's caveat.
+
+GOP payload bytes never touch the filesystem here: every object moves
+through a `repro.storage.StorageBackend` (``backend=`` parameter, spec
+string, or the ``VSS_STORAGE_BACKEND`` env var), which owns atomicity,
+sharding, tiering and crash recovery — the §2 physical-layout
+transparency as an actually swappable layer.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import codec as _codec
+from repro import storage as _storage
 from repro.core import compact as _compact
 from repro.core.cache import CacheManager, CachePolicy
 from repro.core.catalog import Catalog
@@ -112,6 +119,7 @@ class VSS:
         self,
         root: str,
         *,
+        backend=None,  # StorageBackend | spec string | None (env/default)
         budget_multiple: float = DEFAULT_BUDGET_MULTIPLE,
         solver: str = "dp",
         cost_model: Optional[CostModel] = None,
@@ -123,13 +131,50 @@ class VSS:
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.catalog = Catalog(os.path.join(root, "catalog.sqlite"))
+        if backend is None:
+            backend = os.environ.get(_storage.ENV_VAR, _storage.DEFAULT_SPEC)
+        if isinstance(backend, str):
+            backend = _storage.make_backend(
+                backend, os.path.join(root, "objects")
+            )
+        self.backend = backend
+        if isinstance(backend, _storage.TieredBackend):
+            # hot-tier spill ordering = the catalog's LRU_VSS sequence
+            # numbers; policy stays in cache.py / the catalog
+            backend.set_priority_fn(self.catalog.lru_for_paths)
+        # layout guard: the scavenger treats unresolvable keys as lost
+        # data, so opening an existing store under a different placement
+        # scheme must fail loudly instead of wiping the catalog
+        fp = self.backend.layout_fingerprint()
+        recorded = self.catalog.get_meta("storage_layout")
+        if recorded != fp:
+            if self.catalog.any_gops():
+                # recorded None here means a pre-layout-stamp catalog
+                # (absolute paths on a bare directory) — unmigratable
+                raise ValueError(
+                    f"store at {root!r} was created with storage layout"
+                    f" {recorded!r} but opened with {fp!r}; reopen with a"
+                    " matching backend (the startup scavenger would"
+                    " otherwise treat every object as missing)"
+                )
+            self.catalog.set_meta("storage_layout", fp)
+        # startup scavenger: reconcile objects against the catalog so a
+        # crash mid-write never leaves a row pointing at a torn object.
+        # A cleanly-closed store skips the O(objects) sweep.
+        if self.catalog.get_meta("clean_shutdown") == "1":
+            self.recovery = _storage.RecoveryReport()
+        else:
+            self.recovery = self.backend.recover(self.catalog)
+        self.catalog.set_meta("clean_shutdown", "0")
         self.budget_multiple = budget_multiple
         self.solver = solver
         self.cost_model = cost_model or CostModel.default()
         self.policy = cache_policy or CachePolicy()
-        self.cache = CacheManager(self.catalog, self.policy)
+        self.cache = CacheManager(self.catalog, self.policy,
+                                  backend=self.backend)
         self.quality = QualityEstimator()
-        self.deferred = DeferredCompressor(self.catalog, self.policy)
+        self.deferred = DeferredCompressor(self.catalog, self.policy,
+                                           backend=self.backend)
         self.enable_deferred = enable_deferred
         self.enable_compaction = enable_compaction
         self.use_pallas = use_pallas
@@ -258,7 +303,7 @@ class VSS:
             )
             self.cache.maybe_evict(name)
             if self.enable_compaction:
-                _compact.compact(self.catalog, name, self.root)
+                _compact.compact(self.catalog, name, self.backend)
 
         return ReadResult(frames, out_codec, encoded, plan, out_fps)
 
@@ -467,8 +512,7 @@ class VSS:
                 continue
             gop_ids.append(g.gop_id)
             if gs >= f0 and ge <= f1:  # fully inside: verbatim bytes
-                with open(g.path, "rb") as f:
-                    data = f.read()
+                data = self.backend.get(g.path)
                 if is_wrapped(data):
                     data = unwrap_bytes(data)
                 out.append(_codec.deserialize_gop(data))
@@ -491,10 +535,7 @@ class VSS:
             g for g in run.gops
             if g.start_frame < f1 and g.start_frame + g.num_frames > f0
         ]
-        frames_list = []
-        for g in gops:
-            frames_list.append(self._load_gop_frames(g))
-        frames = np.concatenate(frames_list, axis=0)
+        frames = np.concatenate(self._load_gops_frames(gops), axis=0)
         base = gops[0].start_frame
         frames = frames[f0 - base : f1 - base]
         # frame-rate division
@@ -511,17 +552,34 @@ class VSS:
         frames = resample(frames, resolution)
         return frames, [g.gop_id for g in gops]
 
+    def _decode_gop_bytes(self, data: bytes) -> np.ndarray:
+        if is_wrapped(data):
+            data = unwrap_bytes(data)
+        enc = _codec.deserialize_gop(data)
+        return _codec.decode_gop(enc, use_pallas=self.use_pallas)
+
     def _load_gop_frames(self, g: GopMeta) -> np.ndarray:
         if g.joint_ref is not None:
             from repro.core import joint as _joint
 
             return _joint.reconstruct_gop(self, g)
-        with open(g.path, "rb") as f:
-            data = f.read()
-        if is_wrapped(data):
-            data = unwrap_bytes(data)
-        enc = _codec.deserialize_gop(data)
-        return _codec.decode_gop(enc, use_pallas=self.use_pallas)
+        return self._decode_gop_bytes(self.backend.get(g.path))
+
+    def _load_gops_frames(self, gops: Sequence[GopMeta]) -> List[np.ndarray]:
+        """Load many GOPs' frames; plain payloads go through one
+        ``batch_get`` so sharded/remote backends overlap the I/O."""
+        plain = [g for g in gops if g.joint_ref is None]
+        blobs = dict(zip(
+            (g.gop_id for g in plain),
+            self.backend.batch_get([g.path for g in plain]),
+        ))
+        out: List[np.ndarray] = []
+        for g in gops:
+            if g.joint_ref is not None:
+                out.append(self._load_gop_frames(g))
+            else:
+                out.append(self._decode_gop_bytes(blobs[g.gop_id]))
+        return out
 
     # ------------------------------------------------------------------
     # joint compression driver (§5.1) — candidate search + Algorithm 1
@@ -600,18 +658,17 @@ class VSS:
             s, e, bound, parent_is_original=parent.is_original,
             is_original=False,
         )
-        pdir = os.path.join(self.root, name, str(pid))
-        os.makedirs(pdir, exist_ok=True)
         tick = self.catalog.lru_clock()
         if encoded is not None:
             start = 0
             for i, enc in enumerate(encoded):
-                path = os.path.join(pdir, f"{i}.tvc")
+                key = f"{name}/{pid}/{i}.tvc"
                 data = _codec.serialize_gop(enc)
-                with open(path, "wb") as f:
-                    f.write(data)
+                # publish-then-index: the object is durable (atomic put)
+                # before the catalog row that references it exists
+                self.backend.put(key, data)
                 self.catalog.add_gop(
-                    pid, i, start, enc.num_frames, len(data), path,
+                    pid, i, start, enc.num_frames, len(data), key,
                     lru_seq=tick,
                 )
                 start += enc.num_frames
@@ -620,12 +677,11 @@ class VSS:
                 _codec.split_into_gops(frames, "rgb")
             ):
                 enc = _codec.encode_gop(chunk, "rgb")
-                path = os.path.join(pdir, f"{i}.tvc")
+                key = f"{name}/{pid}/{i}.tvc"
                 data = _codec.serialize_gop(enc)
-                with open(path, "wb") as f:
-                    f.write(data)
+                self.backend.put(key, data)
                 self.catalog.add_gop(
-                    pid, i, start, enc.num_frames, len(data), path,
+                    pid, i, start, enc.num_frames, len(data), key,
                     lru_seq=tick,
                 )
         return pid
@@ -666,9 +722,16 @@ class VSS:
             "budget": self.catalog.get_budget(name),
         }
 
+    def drop(self, name: str) -> None:
+        """Delete a logical video: catalog rows and backend objects."""
+        for key in self.catalog.drop_logical(name):
+            self.backend.delete(key)
+
     def close(self):
         self.deferred.stop_background()
+        self.catalog.set_meta("clean_shutdown", "1")
         self.catalog.close()
+        self.backend.close()
 
 
 class VSSWriter:
@@ -687,7 +750,6 @@ class VSSWriter:
         self._next_frame = 0
         self._next_idx = 0
         self._pid: Optional[int] = None
-        self._dir: Optional[str] = None
         self._bytes_written = 0
         self._t_start = t_start
         self._closed = False
@@ -703,8 +765,6 @@ class VSSWriter:
             parent_is_original=True, is_original=True,
         )
         self.store.catalog.set_original(self.name, self._pid)
-        self._dir = os.path.join(self.store.root, self.name, str(self._pid))
-        os.makedirs(self._dir, exist_ok=True)
         if self.gop_frames is None:
             self.gop_frames = (
                 _codec.gop.frames_per_uncompressed_gop((h, w, c))
@@ -729,14 +789,14 @@ class VSSWriter:
     def _flush_gop(self, chunk: np.ndarray) -> None:
         enc = _codec.encode_gop(chunk, self.codec,
                                 use_pallas=self.store.use_pallas)
-        path = os.path.join(self._dir, f"{self._next_idx}.tvc")
+        key = f"{self.name}/{self._pid}/{self._next_idx}.tvc"
         data = _codec.serialize_gop(enc)
-        with open(path, "wb") as f:
-            f.write(data)
+        # publish-then-index (crash safety: see repro.storage.recovery)
+        self.store.backend.put(key, data)
         tick = self.store.catalog.lru_clock()
         self.store.catalog.add_gop(
             self._pid, self._next_idx, self._next_frame, chunk.shape[0],
-            len(data), path, lru_seq=tick,
+            len(data), key, lru_seq=tick,
         )
         self._next_idx += 1
         self._next_frame += chunk.shape[0]

@@ -1,0 +1,12 @@
+"""jax version compatibility for the Pallas TPU kernels.
+
+Newer jax exposes ``pltpu.CompilerParams``; 0.4.x names the same class
+``TPUCompilerParams``.  Import ``pltpu`` from here so every kernel sees
+one spelling regardless of the installed wheel.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+if not hasattr(pltpu, "CompilerParams"):
+    pltpu.CompilerParams = pltpu.TPUCompilerParams  # type: ignore[attr-defined]
+
+__all__ = ["pltpu"]

@@ -13,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import pltpu
 
 DEFAULT_BH = 8
 DEFAULT_BW = 128

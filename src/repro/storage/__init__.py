@@ -1,0 +1,88 @@
+"""`repro.storage` — pluggable tiered storage backends for GOP payloads.
+
+VSS §2 promises that the storage manager "transparently and
+automatically arranges the data on disk".  This package is that
+promise's seam: the catalog stays the control plane (metadata, temporal
+index, LRU clock), while every payload byte moves through a
+`StorageBackend` keyed by backend-relative object keys — the catalog's
+``gop.path`` column.  `repro.core` (store/cache/deferred/compact/joint)
+contains no raw ``open()`` on payload paths; swap the backend and the
+whole §2–§5 pipeline (read planning, LRU_VSS eviction, deferred
+compression, compaction, joint compression) runs unchanged on a new
+physical layout.
+
+Backends
+  * `MemoryBackend` — dict-backed; tests, benchmarks, hot tiers.
+  * `LocalFSBackend` — one file per object, atomic temp+``os.replace``
+    publish, optional fsync, crash-recovery scavenger.
+  * `ShardedBackend` — consistent-hashes keys over N volumes; fans
+    ``batch_get`` over a thread pool so the §3 read plans overlap I/O.
+  * `TieredBackend` — bounded hot memory tier over any cold backend,
+    write-through; spill ordering is wired to the catalog's LRU_VSS
+    sequence numbers so eviction *policy* stays in `repro.core.cache`.
+
+Selection: ``VSS(root, backend=...)`` accepts an instance or a spec
+string; with neither, the ``VSS_STORAGE_BACKEND`` env var (default
+``local``) decides, so every benchmark runs against every backend.
+
+Spec grammar (see `make_backend`):
+    local | local:fsync | memory | sharded:<N> | tiered[:<cold spec>]
+"""
+from __future__ import annotations
+
+from repro.storage.base import (
+    ObjectNotFound,
+    ObjectStat,
+    RecoveryReport,
+    StorageBackend,
+)
+from repro.storage.localfs import LocalFSBackend
+from repro.storage.memory import MemoryBackend
+from repro.storage.recovery import scavenge, validate_gop_bytes
+from repro.storage.sharded import ShardedBackend
+from repro.storage.tiered import TieredBackend
+
+ENV_VAR = "VSS_STORAGE_BACKEND"
+DEFAULT_SPEC = "local"
+
+
+def make_backend(spec: str, root: str) -> StorageBackend:
+    """Build a backend from a spec string; ``root`` anchors fs-backed
+    layouts (each spec owns a distinct subtree so they never collide).
+
+        local            one volume under <root>
+        local:fsync      same, fsync on every publish
+        memory           no persistence
+        sharded:<N>      N LocalFS volumes under <root>/vol*
+        tiered           memory hot tier over local
+        tiered:<spec>    memory hot tier over any cold spec
+    """
+    spec = (spec or DEFAULT_SPEC).strip().lower()
+    head, _, rest = spec.partition(":")
+    if head in ("local", "localfs"):
+        return LocalFSBackend(root, fsync=rest == "fsync")
+    if head == "memory":
+        return MemoryBackend()
+    if head == "sharded":
+        n = int(rest) if rest else 2
+        return ShardedBackend.local(root, n)
+    if head == "tiered":
+        return TieredBackend(make_backend(rest or DEFAULT_SPEC, root))
+    raise ValueError(f"unknown storage backend spec {spec!r}")
+
+
+__all__ = [
+    "ENV_VAR",
+    "DEFAULT_SPEC",
+    "LocalFSBackend",
+    "MemoryBackend",
+    "ObjectNotFound",
+    "ObjectStat",
+    "RecoveryReport",
+    "ShardedBackend",
+    "StorageBackend",
+    "TieredBackend",
+    "make_backend",
+    "scavenge",
+    "validate_gop_bytes",
+]

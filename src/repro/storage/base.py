@@ -1,0 +1,117 @@
+"""The `StorageBackend` contract — every GOP payload byte goes through it.
+
+VSS's premise (§2) is that the storage manager "transparently and
+automatically arranges the data on disk"; the contract here is the seam
+that makes the physical layout an independently evolvable layer.  The
+store, cache, deferred compressor, compactor and joint-compression
+driver never touch the filesystem directly — they speak in
+*backend-relative keys* (the catalog's ``gop.path`` column), and a
+backend maps keys to bytes however it likes: a dict, one directory,
+N sharded volumes, or a memory tier over any of those.
+
+Contract notes
+  * ``put`` is atomic and durable-on-return (to the backend's level of
+    durability): a reader never observes a half-written object, and a
+    key either maps to the complete new value or the complete old one.
+  * ``delete`` is idempotent — deleting a missing key is a no-op (the
+    eviction and joint-compression paths race deletes benignly).
+  * ``batch_get`` preserves key order and is the backend's chance to
+    overlap I/O (the §3 read plans touch many fragments per read).
+  * ``list`` yields keys under a prefix; order is unspecified.
+  * ``recover`` reconciles backend state against the SQLite catalog at
+    startup (crash recovery); see `repro.storage.recovery`.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Iterable, List, Optional, Sequence
+
+
+class ObjectNotFound(KeyError):
+    """Raised by ``get``/``stat``/``batch_get`` for an unknown key."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectStat:
+    key: str
+    nbytes: int
+
+
+class StorageBackend(abc.ABC):
+    """Abstract GOP object store: opaque bytes addressed by string keys."""
+
+    @abc.abstractmethod
+    def put(self, key: str, data: bytes) -> None:
+        """Atomically store ``data`` under ``key`` (overwrite allowed)."""
+
+    @abc.abstractmethod
+    def get(self, key: str) -> bytes:
+        """Return the full object; raises ObjectNotFound."""
+
+    @abc.abstractmethod
+    def delete(self, key: str) -> None:
+        """Remove ``key``; missing keys are ignored (idempotent)."""
+
+    @abc.abstractmethod
+    def stat(self, key: str) -> ObjectStat:
+        """Size metadata without reading payload; raises ObjectNotFound."""
+
+    @abc.abstractmethod
+    def list(self, prefix: str = "") -> List[str]:
+        """All keys starting with ``prefix`` (order unspecified)."""
+
+    # -- conveniences with sane defaults -----------------------------------
+    def batch_get(self, keys: Sequence[str]) -> List[bytes]:
+        """Fetch many objects, preserving order. Backends that can
+        overlap I/O (sharded volumes, remote stores) override this."""
+        return [self.get(k) for k in keys]
+
+    def exists(self, key: str) -> bool:
+        try:
+            self.stat(key)
+            return True
+        except ObjectNotFound:
+            return False
+
+    def sweep_temps(self) -> int:
+        """Remove in-flight temp artifacts left by a crash; returns the
+        number removed.  No-op for backends without a temp protocol."""
+        return 0
+
+    def layout_fingerprint(self) -> str:
+        """Identifies the *key→object placement scheme*, not the
+        instance: two backends with equal fingerprints resolve the same
+        keys to the same objects under the same store root.  The store
+        stamps this into the catalog at creation and refuses to open
+        (rather than scavenge-wipe) under a mismatched layout."""
+        return type(self).__name__.lower()
+
+    def recover(self, catalog) -> "RecoveryReport":
+        """Reconcile backend contents against the catalog (startup
+        scavenger).  Default: the generic key-level scavenge."""
+        from repro.storage.recovery import scavenge
+
+        return scavenge(self, catalog)
+
+    def close(self) -> None:  # pragma: no cover - trivial
+        pass
+
+
+@dataclasses.dataclass
+class RecoveryReport:
+    """What the startup scavenger found and fixed."""
+
+    temps_removed: int = 0
+    orphans_removed: int = 0
+    gops_dropped: int = 0        # catalog rows whose object was lost/corrupt
+    gops_repaired: int = 0       # rows whose recorded size was stale but
+    # whose object parsed cleanly (e.g. crash between deferred-compress
+    # put and the catalog nbytes update)
+
+    @property
+    def clean(self) -> bool:
+        return not (
+            self.temps_removed or self.orphans_removed
+            or self.gops_dropped or self.gops_repaired
+        )

@@ -1,0 +1,102 @@
+"""Startup scavenger — reconcile backend objects against the catalog.
+
+The write protocol is: (1) put the payload (atomic temp + replace),
+(2) insert the catalog row.  SQLite commits are atomic, so after a
+crash exactly three illegal states can exist, and each has one owner:
+
+  * an in-flight temp artifact (crash during step 1)
+      → `sweep_temps` removes it;
+  * an object no catalog row references (crash between 1 and 2, or a
+    row deleted whose delete(key) never ran)
+      → orphan, removed;
+  * a catalog row whose object is missing or fails validation (an
+    operator-level fault: disk loss, manual truncation — the atomic
+    protocol itself never produces this)
+      → the row is dropped so reads plan around the hole, exactly like
+        a cache-evicted GOP; committed siblings stay readable.
+
+One benign mismatch is repaired rather than dropped: a crash between
+the deferred compressor's `put` and its catalog `nbytes` update leaves
+a valid (smaller, zstd-wrapped) object with a stale size — the row's
+size is corrected in place.
+"""
+from __future__ import annotations
+
+from repro.storage.base import ObjectNotFound, RecoveryReport, StorageBackend
+
+
+def validate_gop_bytes(data: bytes) -> bool:
+    """True iff ``data`` parses as one complete GOP object (optionally
+    deferred-wrapped).  Truncated compressed payloads fail to inflate,
+    which is what makes this a real end-of-object integrity check."""
+    from repro import codec as _codec
+    from repro.codec import tvc as _tvc
+    from repro.core.deferred import is_wrapped, unwrap_bytes
+
+    try:
+        if is_wrapped(data):
+            data = unwrap_bytes(data)
+        enc = _codec.deserialize_gop(data)
+        t, h, w, c = enc.shape
+        if enc.codec == _tvc.RGB:
+            return len(enc.payload) == t * h * w * c
+        tier = _tvc.TIERS[enc.codec]
+        raw = _tvc._unzstd(enc.payload)
+        isz = h * w * c
+        expected = isz + (t - 1) * isz * (tier.resid_bits // 8)
+        return len(raw) == expected
+    except Exception:
+        return False
+
+
+def scavenge(backend: StorageBackend, catalog) -> RecoveryReport:
+    report = RecoveryReport()
+    report.temps_removed = backend.sweep_temps()
+
+    referenced = set(catalog.all_joint_segment_paths())
+    for g in catalog.all_gops():
+        if g.joint_ref is not None:
+            continue  # payload lives in the joint record's segment objects
+        referenced.add(g.path)
+        try:
+            st = backend.stat(g.path)
+        except ObjectNotFound:
+            _drop_gop(catalog, g)
+            report.gops_dropped += 1
+            continue
+        if st.nbytes == g.nbytes:
+            continue
+        data = backend.get(g.path)
+        if validate_gop_bytes(data):
+            catalog.update_gop(g.gop_id, nbytes=len(data),
+                               zwrapped=_looks_wrapped(data))
+            report.gops_repaired += 1
+        else:
+            backend.delete(g.path)
+            _drop_gop(catalog, g)
+            report.gops_dropped += 1
+
+    for key in backend.list():
+        if key not in referenced:
+            backend.delete(key)
+            report.orphans_removed += 1
+    return report
+
+
+def _looks_wrapped(data: bytes) -> bool:
+    from repro.core.deferred import is_wrapped
+
+    return is_wrapped(data)
+
+
+def _drop_gop(catalog, g) -> None:
+    catalog.delete_gop(g.gop_id)
+    if not catalog.gops_for(g.physical_id):
+        # an empty original keeps its metadata row (it defines the
+        # logical video's bounds), matching CacheManager.maybe_evict
+        try:
+            p = catalog.get_physical(g.physical_id)
+        except KeyError:
+            return
+        if catalog.get_original_id(p.logical) != g.physical_id:
+            catalog.delete_physical(g.physical_id)

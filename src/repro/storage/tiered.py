@@ -1,0 +1,163 @@
+"""Hot/cold tiering: a bounded memory tier over any cold backend.
+
+Write-through: every ``put`` lands in the cold backend first (that is
+the durable copy; atomicity/recovery are the cold tier's), then in the
+hot dict.  Reads hit the hot tier when they can and promote on miss.
+
+Spill (demotion from hot) never deletes data — the cold copy is
+authoritative — and its *ordering* is not decided here: the store wires
+``set_priority_fn`` to the catalog's LRU_VSS sequence numbers, so the
+same §4 policy that drives cache eviction (`repro.core.cache`) also
+decides which hot pages are least worth keeping in memory.  Without a
+priority function the tier degrades to plain insertion-order LRU.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.storage.base import ObjectNotFound, ObjectStat, StorageBackend
+
+DEFAULT_HOT_BYTES = 256 * 1024 * 1024
+
+# priority fn: keys -> {key: score}; LOWER score spills first (matches
+# LRU_VSS sequence-number semantics: lower = evict first)
+PriorityFn = Callable[[Sequence[str]], Dict[str, float]]
+
+
+class TieredBackend(StorageBackend):
+    def __init__(
+        self,
+        cold: StorageBackend,
+        *,
+        hot_bytes: int = DEFAULT_HOT_BYTES,
+    ):
+        self.cold = cold
+        self.hot_bytes = hot_bytes
+        self._hot: Dict[str, bytes] = {}
+        self._hot_total = 0
+        self._tick = 0
+        self._insert_seq: Dict[str, int] = {}
+        self._priority_fn: Optional[PriorityFn] = None
+        self._lock = threading.RLock()
+
+    def set_priority_fn(self, fn: Optional[PriorityFn]) -> None:
+        self._priority_fn = fn
+
+    # -- hot-tier bookkeeping ----------------------------------------------
+    def _admit(self, key: str, data: bytes) -> None:
+        if len(data) > self.hot_bytes:
+            return  # would evict everything and still not fit
+        with self._lock:
+            old = self._hot.get(key)
+            if old is not None:
+                self._hot_total -= len(old)
+            self._hot[key] = data
+            self._hot_total += len(data)
+            self._tick += 1
+            self._insert_seq[key] = self._tick
+            self._spill_locked()
+
+    def _spill_locked(self) -> None:
+        if self._hot_total <= self.hot_bytes:
+            return
+        prio: Dict[str, float] = {}
+        if self._priority_fn is not None:
+            try:
+                prio = dict(self._priority_fn(list(self._hot)) or {})
+            except Exception:
+                pass  # policy failure must not break the data path
+        # catalog lru_seq and the internal insert tick are different
+        # counters — never compare them directly.  Rank each class by
+        # its own scale, normalize to [0, 1), and merge: least-wanted
+        # of each class spills first, interleaved fairly (keys the
+        # policy doesn't know about — e.g. _joint segments — degrade to
+        # LRU instead of always losing to catalog-scored keys).
+        scored = sorted((k for k in self._hot if k in prio), key=prio.get)
+        unscored = sorted(
+            (k for k in self._hot if k not in prio),
+            key=lambda k: self._insert_seq.get(k, 0),
+        )
+        rank = {
+            k: i / len(scored) for i, k in enumerate(scored)
+        }
+        rank.update(
+            (k, i / len(unscored)) for i, k in enumerate(unscored)
+        )
+        for key in sorted(self._hot, key=rank.get):
+            if self._hot_total <= self.hot_bytes:
+                break
+            self._hot_total -= len(self._hot.pop(key))
+            self._insert_seq.pop(key, None)
+
+    def hot_keys(self) -> List[str]:
+        with self._lock:
+            return list(self._hot)
+
+    @property
+    def hot_total_bytes(self) -> int:
+        with self._lock:
+            return self._hot_total
+
+    # -- contract ----------------------------------------------------------
+    def put(self, key: str, data: bytes) -> None:
+        self.cold.put(key, data)  # durable copy first (write-through)
+        self._admit(key, bytes(data))
+
+    def get(self, key: str) -> bytes:
+        with self._lock:
+            data = self._hot.get(key)
+        if data is not None:
+            return data
+        data = self.cold.get(key)
+        self._admit(key, data)
+        return data
+
+    def batch_get(self, keys: Sequence[str]) -> List[bytes]:
+        with self._lock:
+            hot = {k: self._hot[k] for k in keys if k in self._hot}
+        missing = [k for k in keys if k not in hot]
+        if missing:
+            fetched = dict(zip(missing, self.cold.batch_get(missing)))
+            for k, v in fetched.items():
+                self._admit(k, v)
+            hot.update(fetched)
+        return [hot[k] for k in keys]
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            old = self._hot.pop(key, None)
+            if old is not None:
+                self._hot_total -= len(old)
+            self._insert_seq.pop(key, None)
+        self.cold.delete(key)
+
+    def stat(self, key: str) -> ObjectStat:
+        with self._lock:
+            data = self._hot.get(key)
+        if data is not None:
+            return ObjectStat(key, len(data))
+        return self.cold.stat(key)
+
+    def list(self, prefix: str = "") -> List[str]:
+        return self.cold.list(prefix)  # cold is authoritative
+
+    def sweep_temps(self) -> int:
+        return self.cold.sweep_temps()
+
+    def layout_fingerprint(self) -> str:
+        # the hot tier is ephemeral; placement is entirely the cold
+        # tier's, so tiered-over-X and plain X are interchangeable
+        return self.cold.layout_fingerprint()
+
+    def recover(self, catalog):
+        with self._lock:  # hot tier does not survive a restart anyway
+            self._hot.clear()
+            self._insert_seq.clear()
+            self._hot_total = 0
+        from repro.storage.recovery import scavenge
+
+        return scavenge(self, catalog)
+
+    def close(self) -> None:
+        self.cold.close()

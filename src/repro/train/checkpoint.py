@@ -183,8 +183,7 @@ class CheckpointManager:
             frames, spec = tree_to_frames(state, cast=cast)
             name = self._video_name(step, repr_)
             if self.vss.catalog.logical_exists(name):
-                for p in self.vss.catalog.drop_logical(name):
-                    _unlink_quiet(p)
+                self.vss.drop(name)
             self.vss.write(name, frames, fps=1.0, codec="rgb")
             entry["reprs"][repr_] = {
                 "video": name,
@@ -206,8 +205,7 @@ class CheckpointManager:
                 continue
             entry = self._manifest.pop(str(s))
             for r in entry["reprs"].values():
-                for p in self.vss.catalog.drop_logical(r["video"]):
-                    _unlink_quiet(p)
+                self.vss.drop(r["video"])
         # cold = every protected master except the newest: zstd-wrap in place
         for s in steps[-self.keep_last:-1]:
             if str(s) not in self._manifest:
@@ -253,9 +251,3 @@ class CheckpointManager:
         self.wait()
         self.vss.close()
 
-
-def _unlink_quiet(path: str):
-    try:
-        os.unlink(path)
-    except FileNotFoundError:
-        pass

@@ -23,8 +23,7 @@ def test_deferred_activates_over_threshold(vss, clip):
     assert gid is not None
     g = vss.catalog.get_gop(gid)
     assert g.zwrapped
-    with open(g.path, "rb") as f:
-        assert is_wrapped(f.read())
+    assert is_wrapped(vss.backend.get(g.path))
     # wrapped GOPs decode transparently on read
     out = vss.read("v", codec="rgb", cache=False).frames
     assert out.shape == clip.shape
@@ -44,7 +43,7 @@ def test_compaction_merges_contiguous_views(vss, clip):
     vss.read("v", t=(0.0, 1.0), codec="tvc-med")
     vss.read("v", t=(1.0, 2.0), codec="tvc-med")
     phys_before = len(vss.catalog.physicals_for("v"))
-    merged = C.compact(vss.catalog, "v", vss.root)
+    merged = C.compact(vss.catalog, "v", vss.backend)
     assert merged >= 1
     assert len(vss.catalog.physicals_for("v")) < phys_before
     # contiguous merged view serves the whole range

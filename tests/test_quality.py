@@ -1,14 +1,35 @@
 """Quality model (§3.2): the transitive MSE bound and admission logic."""
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+import pytest
 
 from repro.core.quality import QualityEstimator, exact_mse, exact_psnr
 from repro.core.types import chain_mse_bound, mse_to_psnr, psnr_to_mse
 
+try:  # property-based when the wheel is present, fixed sweep otherwise
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
 
-@given(st.integers(0, 2**32 - 1))
-@settings(max_examples=60, deadline=None)
+    def _seed_cases(fn):
+        return settings(max_examples=60, deadline=None)(
+            given(st.integers(0, 2**32 - 1))(fn)
+        )
+
+    def _db_cases(fn):
+        return settings(deadline=None)(given(st.floats(1.0, 300.0))(fn))
+
+except ImportError:
+    def _seed_cases(fn):
+        return pytest.mark.parametrize(
+            "seed", [0, 1, 7, 123, 99991, 2**31, 2**32 - 1]
+        )(fn)
+
+    def _db_cases(fn):
+        return pytest.mark.parametrize(
+            "db", [1.0, 2.5, 17.3, 40.0, 97.2, 191.0, 300.0]
+        )(fn)
+
+
+@_seed_cases
 def test_transitive_mse_bound_property(seed):
     """Paper §3.2: MSE(f0,f2) ≤ 2·(MSE(f0,f1) + MSE(f1,f2)) — checked on
     random transformation chains f0 → f1 → f2."""
@@ -26,8 +47,7 @@ def test_chain_bound_exact_for_direct_child():
     assert chain_mse_bound(3.0, 7.5, parent_is_original=False) == 21.0
 
 
-@given(st.floats(1.0, 300.0))
-@settings(deadline=None)
+@_db_cases
 def test_psnr_mse_roundtrip(db):
     assert abs(mse_to_psnr(psnr_to_mse(db)) - db) < 1e-6
 

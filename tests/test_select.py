@@ -1,6 +1,5 @@
 """Fragment selection (§3.1): DP exactness vs brute force and Z3."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import pytest
 
 from repro.core.select import (
     SegmentChoice,
@@ -12,33 +11,65 @@ from repro.core.select import (
     solve_z3,
 )
 
+try:  # property-based when the wheel is present, seeded sweep otherwise
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
 
-@st.composite
-def problems(draw):
-    n_seg = draw(st.integers(1, 5))
-    n_vid = draw(st.integers(1, 4))
-    choices = []
-    for _ in range(n_seg):
-        k = draw(st.integers(1, n_vid))
-        vids = draw(
-            st.lists(st.integers(0, n_vid - 1), min_size=k, max_size=k,
-                     unique=True)
-        )
-        chs = [
-            SegmentChoice(
-                v,
-                draw(st.floats(0, 100, allow_nan=False)),
-                draw(st.floats(0, 50, allow_nan=False)),
+    @st.composite
+    def problems(draw):
+        n_seg = draw(st.integers(1, 5))
+        n_vid = draw(st.integers(1, 4))
+        choices = []
+        for _ in range(n_seg):
+            k = draw(st.integers(1, n_vid))
+            vids = draw(
+                st.lists(st.integers(0, n_vid - 1), min_size=k, max_size=k,
+                         unique=True)
             )
-            for v in vids
-        ]
-        choices.append(chs)
-    segs = [(float(i), float(i + 1)) for i in range(n_seg)]
-    return SelectionProblem(segs, choices)
+            chs = [
+                SegmentChoice(
+                    v,
+                    draw(st.floats(0, 100, allow_nan=False)),
+                    draw(st.floats(0, 50, allow_nan=False)),
+                )
+                for v in vids
+            ]
+            choices.append(chs)
+        segs = [(float(i), float(i + 1)) for i in range(n_seg)]
+        return SelectionProblem(segs, choices)
+
+    def _problem_cases(max_examples):
+        def deco(fn):
+            return settings(max_examples=max_examples, deadline=None)(
+                given(problems())(fn)
+            )
+        return deco
+
+except ImportError:
+    import random
+
+    def _make_problem(seed):
+        r = random.Random(seed)
+        n_seg = r.randint(1, 5)
+        n_vid = r.randint(1, 4)
+        choices = []
+        for _ in range(n_seg):
+            vids = r.sample(range(n_vid), r.randint(1, n_vid))
+            choices.append([
+                SegmentChoice(v, r.uniform(0, 100), r.uniform(0, 50))
+                for v in vids
+            ])
+        segs = [(float(i), float(i + 1)) for i in range(n_seg)]
+        return SelectionProblem(segs, choices)
+
+    def _problem_cases(max_examples):
+        def deco(fn):
+            cases = [_make_problem(s) for s in range(min(max_examples, 60))]
+            return pytest.mark.parametrize("p", cases)(fn)
+        return deco
 
 
-@given(problems())
-@settings(max_examples=150, deadline=None)
+@_problem_cases(150)
 def test_dp_matches_brute_force(p):
     dp = solve_dp(p)
     brute = solve_brute(p)
@@ -46,16 +77,15 @@ def test_dp_matches_brute_force(p):
     assert abs(replay_cost(p, dp.assignment) - dp.cost) < 1e-6
 
 
-@given(problems())
-@settings(max_examples=25, deadline=None)
+@_problem_cases(25)
 def test_z3_matches_dp(p):
+    pytest.importorskip("z3")
     z = solve_z3(p)
     dp = solve_dp(p)
     assert abs(z.cost - dp.cost) < 1e-5  # same optimum (ties may differ)
 
 
-@given(problems())
-@settings(max_examples=100, deadline=None)
+@_problem_cases(100)
 def test_greedy_never_beats_optimal(p):
     g = solve_greedy(p)
     dp = solve_dp(p)

@@ -1,0 +1,428 @@
+"""`repro.storage`: backend conformance, sharding, tiering, recovery."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.storage import (
+    LocalFSBackend,
+    MemoryBackend,
+    ObjectNotFound,
+    ShardedBackend,
+    TieredBackend,
+    make_backend,
+)
+from repro.storage.localfs import TEMP_MARKER
+
+BACKEND_SPECS = ("memory", "local", "local:fsync", "sharded2", "sharded4",
+                 "tiered")
+
+
+def _make(spec, root):
+    if spec == "memory":
+        return MemoryBackend()
+    if spec == "local":
+        return LocalFSBackend(root)
+    if spec == "local:fsync":
+        return LocalFSBackend(root, fsync=True)
+    if spec == "sharded2":
+        return ShardedBackend.local(root, 2)
+    if spec == "sharded4":
+        return ShardedBackend.local(root, 4)
+    if spec == "tiered":
+        return TieredBackend(LocalFSBackend(root), hot_bytes=1 << 20)
+    raise AssertionError(spec)
+
+
+@pytest.fixture(params=BACKEND_SPECS)
+def backend(request, tmp_path):
+    b = _make(request.param, str(tmp_path / "objects"))
+    yield b
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# conformance suite — every backend, same contract
+# ---------------------------------------------------------------------------
+
+def test_put_get_roundtrip(backend):
+    backend.put("v/1/0.tvc", b"alpha")
+    assert backend.get("v/1/0.tvc") == b"alpha"
+    backend.put("v/1/0.tvc", b"beta")  # overwrite
+    assert backend.get("v/1/0.tvc") == b"beta"
+
+
+def test_missing_key_raises(backend):
+    with pytest.raises(ObjectNotFound):
+        backend.get("nope")
+    with pytest.raises(ObjectNotFound):
+        backend.stat("nope")
+
+
+def test_delete_idempotent(backend):
+    backend.put("k", b"x")
+    backend.delete("k")
+    backend.delete("k")  # second delete is a no-op
+    assert not backend.exists("k")
+
+
+def test_stat_sizes(backend):
+    backend.put("a", b"12345")
+    assert backend.stat("a").nbytes == 5
+
+
+def test_batch_get_preserves_order(backend):
+    keys = [f"v/1/{i}.tvc" for i in range(20)]
+    for i, k in enumerate(keys):
+        backend.put(k, f"payload-{i}".encode())
+    got = backend.batch_get(list(reversed(keys)))
+    assert got == [f"payload-{i}".encode() for i in reversed(range(20))]
+
+
+def test_batch_get_missing_raises(backend):
+    backend.put("a", b"x")
+    with pytest.raises(ObjectNotFound):
+        backend.batch_get(["a", "missing"])
+
+
+def test_list_prefix(backend):
+    backend.put("v/1/0.tvc", b"x")
+    backend.put("v/2/0.tvc", b"y")
+    backend.put("w/1/0.tvc", b"z")
+    assert sorted(backend.list("v/")) == ["v/1/0.tvc", "v/2/0.tvc"]
+    assert sorted(backend.list()) == ["v/1/0.tvc", "v/2/0.tvc", "w/1/0.tvc"]
+
+
+# ---------------------------------------------------------------------------
+# backend-specific behaviour
+# ---------------------------------------------------------------------------
+
+def test_localfs_rejects_escaping_keys(tmp_path):
+    b = LocalFSBackend(str(tmp_path))
+    for bad in ("/abs", "../escape", "a/../../b"):
+        with pytest.raises(ValueError):
+            b.put(bad, b"x")
+
+
+def test_localfs_atomic_leaves_no_temps(tmp_path):
+    b = LocalFSBackend(str(tmp_path), fsync=True)
+    for i in range(10):
+        b.put(f"v/{i}.tvc", os.urandom(1000))
+    for dirpath, _dirs, files in os.walk(str(tmp_path)):
+        assert not [f for f in files if TEMP_MARKER in f]
+
+
+def test_sharded_distribution_and_stability(tmp_path):
+    b = ShardedBackend.local(str(tmp_path), 4)
+    keys = [f"v/{i}/{j}.tvc" for i in range(20) for j in range(10)]
+    for k in keys:
+        b.put(k, k.encode())
+    per_vol = [len(v.list()) for v in b.volumes]
+    assert sum(per_vol) == len(keys)
+    assert all(n > 0 for n in per_vol)  # every volume takes a share
+    # placement is stable and routed: the owning volume holds the key
+    for k in keys[:10]:
+        assert b.volumes[b.volume_for(k)].exists(k)
+    b.close()
+
+
+def test_sharded_batch_get_fans_out(tmp_path):
+    b = ShardedBackend.local(str(tmp_path), 4)
+    keys = [f"k{i}" for i in range(50)]
+    for i, k in enumerate(keys):
+        b.put(k, bytes([i]))
+    assert b.batch_get(keys) == [bytes([i]) for i in range(50)]
+    b.close()
+
+
+def test_tiered_write_through_and_spill(tmp_path):
+    cold = LocalFSBackend(str(tmp_path))
+    b = TieredBackend(cold, hot_bytes=2500)
+    for i in range(10):
+        b.put(f"k{i}", bytes(1000))
+    assert b.hot_total_bytes <= 2500  # spill kept the hot tier bounded
+    for i in range(10):
+        assert cold.exists(f"k{i}")  # write-through: cold has everything
+        assert b.get(f"k{i}") == bytes(1000)  # spilled keys still readable
+
+
+def test_tiered_spill_follows_priority(tmp_path):
+    b = TieredBackend(LocalFSBackend(str(tmp_path)), hot_bytes=2500)
+    # LRU_VSS semantics: lower sequence number spills first
+    prio = {"keep-a": 100.0, "keep-b": 90.0, "drop-a": 1.0, "drop-b": 2.0}
+    b.set_priority_fn(lambda keys: {k: prio.get(k, 50.0) for k in keys})
+    for k in prio:
+        b.put(k, bytes(1000))
+    hot = set(b.hot_keys())
+    assert "keep-a" in hot and "keep-b" in hot
+    assert "drop-a" not in hot
+
+
+def test_tiered_get_promotes(tmp_path):
+    cold = LocalFSBackend(str(tmp_path))
+    cold.put("x", b"cold-data")
+    b = TieredBackend(cold, hot_bytes=1 << 20)
+    assert b.get("x") == b"cold-data"
+    assert "x" in b.hot_keys()
+
+
+def test_make_backend_specs(tmp_path):
+    root = str(tmp_path / "o")
+    assert isinstance(make_backend("memory", root), MemoryBackend)
+    assert isinstance(make_backend("local", root), LocalFSBackend)
+    assert make_backend("local:fsync", root).fsync
+    sh = make_backend("sharded:3", root)
+    assert isinstance(sh, ShardedBackend) and len(sh.volumes) == 3
+    t = make_backend("tiered:sharded:2", root)
+    assert isinstance(t, TieredBackend)
+    assert isinstance(t.cold, ShardedBackend) and len(t.cold.volumes) == 2
+    with pytest.raises(ValueError):
+        make_backend("s3", root)
+
+
+# ---------------------------------------------------------------------------
+# VSS integration: every backend serves the full read/write pipeline
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def short_clip():
+    from repro.data.video import synthesize_road
+
+    return synthesize_road(30, width=128, height=96, seed=3)
+
+
+@pytest.mark.parametrize("spec", BACKEND_SPECS)
+def test_vss_pipeline_on_every_backend(spec, tmp_path, short_clip):
+    from repro.core.store import VSS
+
+    vss = VSS(str(tmp_path / "vss"),
+              backend=_make(spec, str(tmp_path / "vss" / "objects")))
+    vss.write("v", short_clip, fps=30.0, codec="tvc-hi", gop_frames=10)
+    out = vss.read("v", codec="rgb").frames  # cached read → admission path
+    assert out.shape == short_clip.shape
+    r = vss.read("v", t=(0.2, 0.8), codec="hevc", cache=False)
+    assert r.frames.shape[0] == 18
+    vss.close()
+
+
+def test_vss_env_backend_selection(tmp_path, short_clip, monkeypatch):
+    from repro.core.store import VSS
+    from repro.storage import ENV_VAR
+
+    monkeypatch.setenv(ENV_VAR, "sharded:2")
+    vss = VSS(str(tmp_path / "vss"))
+    assert isinstance(vss.backend, ShardedBackend)
+    vss.write("v", short_clip, fps=30.0, codec="tvc-med", gop_frames=10)
+    assert np.asarray(vss.read("v", codec="rgb", cache=False).frames).shape \
+        == short_clip.shape
+    vss.close()
+
+
+def test_no_raw_open_on_payload_paths():
+    """Acceptance guard: GOP payload I/O must live in repro.storage."""
+    import pathlib
+
+    core = pathlib.Path(__file__).parent.parent / "src" / "repro" / "core"
+    offenders = []
+    for f in core.glob("*.py"):
+        src = f.read_text()
+        if "open(" in src.replace("logical_exists(", "").replace(
+                "os.open(", ""):
+            for i, line in enumerate(src.splitlines(), 1):
+                if "open(" in line and "os.open" not in line \
+                        and "logical_exists" not in line \
+                        and not line.strip().startswith("#"):
+                    offenders.append(f"{f.name}:{i}: {line.strip()}")
+    assert not offenders, offenders
+
+
+# ---------------------------------------------------------------------------
+# crash recovery
+# ---------------------------------------------------------------------------
+
+def _fs_path_for(root, key):
+    return os.path.join(root, "objects", *key.split("/"))
+
+
+def test_crash_recovery_scavenges_and_preserves_committed(tmp_path,
+                                                          short_clip):
+    from repro.core.store import VSS
+
+    root = str(tmp_path / "vss")
+    vss = VSS(root)
+    vss.write("v", short_clip, fps=30.0, codec="tvc-hi", gop_frames=10)
+    vss.read("v", t=(0.0, 0.6), codec="tvc-med")  # cache a derived view
+    view_gops = [
+        g for p in vss.catalog.physicals_for("v") if not p.is_original
+        for g in vss.catalog.gops_for(p.physical_id)
+    ]
+    assert view_gops
+    victim = view_gops[0]
+    n_gops_before = len(vss.catalog.all_gops())
+    vss.catalog.close()  # crash: no clean-shutdown marker is written
+
+    # simulate a crash's aftermath behind the store's back:
+    vpath = _fs_path_for(root, victim.path)
+    with open(vpath, "r+b") as f:  # torn object under a live key
+        f.truncate(max(os.path.getsize(vpath) // 2, 8))
+    orphan = _fs_path_for(root, "v/9/0.tvc")  # object with no catalog row
+    os.makedirs(os.path.dirname(orphan), exist_ok=True)
+    with open(orphan, "wb") as f:
+        f.write(b"orphan")
+    with open(orphan + TEMP_MARKER + "999-0", "wb") as f:
+        f.write(b"partial")  # in-flight temp artifact
+
+    vss2 = VSS(root)  # startup scavenger runs here
+    rep = vss2.recovery
+    assert rep.temps_removed == 1
+    assert rep.orphans_removed == 1
+    assert rep.gops_dropped == 1
+    assert not os.path.exists(orphan)
+    # the torn object is gone from catalog and disk
+    assert len(vss2.catalog.all_gops()) == n_gops_before - 1
+    assert not os.path.exists(vpath)
+    # committed GOPs survive: the full original still reads back exactly
+    out = vss2.read("v", codec="rgb", cache=False).frames
+    from repro.core.quality import exact_psnr
+
+    assert out.shape == short_clip.shape
+    assert exact_psnr(out, short_clip) >= 48.0  # tvc-hi quality intact
+    vss2.close()
+
+
+def test_recovery_repairs_stale_deferred_size(tmp_path, short_clip):
+    """Crash between the deferred compressor's put and its catalog size
+    update: object is valid (wrapped, smaller) but nbytes is stale —
+    the scavenger repairs the row instead of dropping it."""
+    from repro.core.deferred import wrap_bytes
+    from repro.core.store import VSS
+
+    root = str(tmp_path / "vss")
+    vss = VSS(root)
+    vss.write("v", short_clip, fps=30.0, codec="rgb", gop_frames=10)
+    g = vss.catalog.gops_for(vss.catalog.get_original_id("v"))[0]
+    raw = vss.backend.get(g.path)
+    vss.backend.put(g.path, wrap_bytes(raw, 3))  # ...crash before update
+    vss.catalog.close()  # crash: no clean-shutdown marker is written
+
+    vss2 = VSS(root)
+    assert vss2.recovery.gops_repaired == 1
+    assert vss2.recovery.gops_dropped == 0
+    g2 = vss2.catalog.get_gop(g.gop_id)
+    assert g2.zwrapped and g2.nbytes < len(raw)
+    out = vss2.read("v", codec="rgb", cache=False).frames
+    assert np.array_equal(out, short_clip)  # rgb+lossless wrap: bit-exact
+    vss2.close()
+
+
+def test_recovery_clean_on_healthy_store(tmp_path, short_clip):
+    from repro.core.store import VSS
+
+    root = str(tmp_path / "vss")
+    vss = VSS(root)
+    vss.write("v", short_clip, fps=30.0, codec="tvc-med", gop_frames=10)
+    vss.close()
+    vss2 = VSS(root)  # clean shutdown: the O(objects) sweep is skipped
+    assert vss2.recovery.clean
+    vss2.close()
+
+
+def test_crash_reopen_without_close_runs_scavenger(tmp_path, short_clip):
+    from repro.core.store import VSS
+
+    root = str(tmp_path / "vss")
+    vss = VSS(root)
+    vss.write("v", short_clip, fps=30.0, codec="tvc-med", gop_frames=10)
+    vss.backend.put("v/orphan.tvc", b"debris")  # no catalog row
+    vss.catalog.close()  # crash
+    vss2 = VSS(root)
+    assert vss2.recovery.orphans_removed == 1
+    vss2.close()
+
+
+def test_layout_mismatch_refuses_to_open(tmp_path, short_clip):
+    """A mismatched backend must fail loudly, not scavenge-wipe the
+    catalog of a healthy store."""
+    from repro.core.store import VSS
+
+    root = str(tmp_path / "vss")
+    vss = VSS(root)  # default local layout
+    vss.write("v", short_clip, fps=30.0, codec="tvc-med", gop_frames=10)
+    vss.close()
+    with pytest.raises(ValueError, match="storage layout"):
+        VSS(root, backend="sharded:2")
+    with pytest.raises(ValueError, match="storage layout"):
+        VSS(root, backend=MemoryBackend())
+    vss2 = VSS(root)  # original layout still opens and reads fine
+    assert vss2.read("v", codec="rgb", cache=False).frames.shape \
+        == short_clip.shape
+    vss2.close()
+
+
+def test_tiered_layout_interchangeable_with_cold(tmp_path, short_clip):
+    """The hot tier is ephemeral — tiered-over-local and plain local
+    share a placement scheme and may reopen each other's stores."""
+    from repro.core.store import VSS
+
+    root = str(tmp_path / "vss")
+    vss = VSS(root, backend="local")
+    vss.write("v", short_clip, fps=30.0, codec="tvc-med", gop_frames=10)
+    vss.close()
+    vss2 = VSS(root, backend="tiered:local")
+    assert vss2.read("v", codec="rgb", cache=False).frames.shape \
+        == short_clip.shape
+    vss2.close()
+
+
+def test_drop_frees_joint_segments_only_at_last_referent(vss, overlap_pair):
+    left, right, _ = overlap_pair
+    vss.write("cam_a", left, fps=30.0, codec="rgb", gop_frames=left.shape[0])
+    vss.write("cam_b", right, fps=30.0, codec="rgb",
+              gop_frames=right.shape[0])
+    jids = vss.apply_joint_compression(["cam_a", "cam_b"])
+    assert jids
+    seg_keys = vss.catalog.all_joint_segment_paths()
+    assert seg_keys and all(vss.backend.exists(k) for k in seg_keys)
+    vss.drop("cam_a")  # partner still reads through the shared pieces
+    assert all(vss.backend.exists(k) for k in seg_keys)
+    vss.drop("cam_b")  # last referent: pieces and joint rows are freed
+    assert not any(vss.backend.exists(k) for k in seg_keys)
+    assert not vss.catalog.all_joint_segment_paths()
+
+
+# ---------------------------------------------------------------------------
+# zlib fallback (the no-zstandard environment)
+# ---------------------------------------------------------------------------
+
+def test_wrap_roundtrip_without_zstd(monkeypatch):
+    from repro.core import deferred
+
+    monkeypatch.setattr(deferred, "zstandard", None)
+    data = b"y" * 5000 + bytes(range(256))
+    w = deferred.wrap_bytes(data, 5)
+    assert w[:4] == deferred.LMAGIC
+    assert deferred.is_wrapped(w)
+    # decode side needs no zstd either way for zlib-wrapped data
+    assert deferred.unwrap_bytes(w) == data
+
+
+def test_codec_roundtrip_without_zstd(monkeypatch, short_clip):
+    from repro.codec import tvc
+
+    monkeypatch.setattr(tvc, "zstandard", None)
+    enc = tvc.encode_gop(short_clip[:8], "tvc-hi")
+    out = tvc.decode_gop(enc)
+    assert out.shape == short_clip[:8].shape
+    # serialized form round-trips through the normal object path
+    assert tvc.decode_gop(tvc.deserialize_gop(tvc.serialize_gop(enc))).shape \
+        == out.shape
+
+
+def test_validate_gop_bytes_detects_truncation(short_clip):
+    from repro.codec import tvc
+    from repro.storage import validate_gop_bytes
+
+    data = tvc.serialize_gop(tvc.encode_gop(short_clip[:8], "tvc-med"))
+    assert validate_gop_bytes(data)
+    assert not validate_gop_bytes(data[: len(data) // 2])
+    assert not validate_gop_bytes(b"garbage")
