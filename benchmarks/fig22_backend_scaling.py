@@ -110,3 +110,19 @@ def _run(frames, dur, rows, stores, roots, scale: float) -> list:
                         nbytes / (1 << 20) / min(times), "MiB/s",
                         f"{len(keys)} fragments best-of-{BATCH_TRIALS}"))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller clip, same sweep")
+    ap.add_argument("--scale", type=float, default=None)
+    args = ap.parse_args()
+    scale = args.scale if args.scale is not None else (
+        0.5 if args.quick else 1.0
+    )
+    print("bench,name,value,unit,notes")
+    for row in run(scale):
+        print(row.csv())

@@ -1,0 +1,117 @@
+"""Fig. 23 (beyond-paper) — joint multi-request planning: ``read_batch``
+vs a sequential ``read()`` loop.
+
+The workload models a VDBMS issuing N concurrent overlapping reads of
+the same camera (staggered analysis windows — the multi-user pattern
+the ROADMAP's north star implies).  Sequentially each read plans alone,
+fetches its own GOPs and decodes the overlap again; ``read_batch``
+plans one joint `SelectionProblem` over the union, fetches every GOP
+once through a single ``backend.batch_get``, and decodes each GOP at
+most once.
+
+Claim checked: batch is ≥ 1.2× faster than the sequential loop on the
+multi-request workload, on every backend (the margin is mostly decode
+dedupe, so it holds even on MemoryBackend where I/O is free).
+
+    PYTHONPATH=src python -m benchmarks.fig23_batch_reads [--quick]
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import Row, road, timer
+from repro.core.spec import ReadSpec
+from repro.core.store import VSS
+from repro.storage import LocalFSBackend, MemoryBackend, ShardedBackend
+
+BACKENDS = (
+    ("memory", lambda root: MemoryBackend()),
+    ("localfs", lambda root: LocalFSBackend(root)),
+    ("sharded4", lambda root: ShardedBackend.local(root, 4)),
+)
+
+N_REQUESTS = 8
+WINDOW_S = 1.5
+STAGGER_S = 0.25
+TRIALS = 3
+
+
+def _specs(dur: float) -> list:
+    out = []
+    for i in range(N_REQUESTS):
+        s = min(i * STAGGER_S, max(dur - WINDOW_S, 0.0))
+        out.append(ReadSpec(
+            name="v", t=(s, min(s + WINDOW_S, dur)), codec="rgb",
+            cache=False,
+        ))
+    return out
+
+
+def run(scale: float = 1.0) -> list:
+    frames = road(max(int(240 * scale), 60))
+    dur = frames.shape[0] / 30.0
+    rows = []
+    stores, roots = [], []
+    try:
+        for name, make in BACKENDS:
+            root = tempfile.mkdtemp(prefix=f"vssbench23_{name}_")
+            roots.append(root)
+            vss = VSS(root, backend=make(root + "/objects"))
+            # dense lossless GOPs: the decode-heavy §3 access pattern
+            vss.write("v", frames, fps=30.0, codec="tvc-ll", gop_frames=5,
+                      budget_bytes=10**10)
+            stores.append((name, vss))
+
+        specs = _specs(dur)
+        results = {name: ([], []) for name, _ in stores}
+        for _ in range(TRIALS):  # interleave trials across backends
+            for name, vss in stores:
+                with timer() as t_seq:
+                    for sp in specs:
+                        vss.read(
+                            "v", t=sp.t, codec=sp.codec, cache=False
+                        ).frames
+                with timer() as t_batch:
+                    for r in vss.read_batch(specs):
+                        r.frames
+                results[name][0].append(t_seq[0])
+                results[name][1].append(t_batch[0])
+
+        for name, _vss in stores:
+            seq, batch = min(results[name][0]), min(results[name][1])
+            rows.append(Row("fig23", f"{name}_sequential", seq, "s",
+                            f"{N_REQUESTS} overlapping reads"))
+            rows.append(Row("fig23", f"{name}_read_batch", batch, "s",
+                            f"{N_REQUESTS} overlapping reads"))
+            rows.append(Row("fig23", f"{name}_speedup", seq / batch, "x",
+                            "sequential / read_batch (want >= 1.2)"))
+        return rows
+    finally:
+        for _name, vss in stores:
+            vss.close()
+        for root in roots:
+            shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller clip, same claim")
+    ap.add_argument("--scale", type=float, default=None)
+    args = ap.parse_args()
+    scale = args.scale if args.scale is not None else (
+        0.5 if args.quick else 1.0
+    )
+    print("bench,name,value,unit,notes")
+    failed = False
+    for row in run(scale):
+        print(row.csv())
+        if row.name.endswith("_speedup") and row.value < 1.2:
+            failed = True
+    if failed:
+        raise SystemExit("fig23: read_batch speedup below the 1.2x claim")

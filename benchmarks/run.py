@@ -26,6 +26,7 @@ MODULES = (
     "fig20_zstd_read",
     "fig21_end_to_end",
     "fig22_backend_scaling",
+    "fig23_batch_reads",
     "table2_joint_quality",
     "roofline",
 )

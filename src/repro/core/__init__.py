@@ -1,4 +1,5 @@
 """The paper's primary contribution: the VSS storage manager."""
+from repro.core.spec import ReadSpec, ResolvedRead, WriteSpec  # noqa: F401
 from repro.core.store import VSS, ReadResult, VSSWriter, resample  # noqa: F401
 from repro.core.types import (  # noqa: F401
     DEFAULT_QUALITY_EPS_DB,

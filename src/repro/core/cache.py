@@ -18,7 +18,7 @@ Defaults γ=2, ζ=1, τ=40 dB, exactly the prototype's.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.catalog import Catalog
 from repro.core.types import GopMeta, PhysicalMeta, mse_to_psnr
@@ -168,6 +168,18 @@ class CacheManager:
                 if self.catalog.get_original_id(logical) != g.physical_id:
                     self.catalog.delete_physical(g.physical_id)
         return evicted
+
+    def evict_for_batch(self, logicals: Iterable[str]) -> Dict[str, List[int]]:
+        """Batch admission accounting: after ``read_batch`` admits many
+        results, run ONE budget-enforcement pass per distinct logical
+        video instead of one per admission.  LRU_VSS sequence numbers —
+        the expensive part (redundancy ranks and baseline guards over
+        every physical) — are recomputed per *pass*, so N same-video
+        admissions cost one recompute cascade, not N."""
+        return {
+            name: self.maybe_evict(name)
+            for name in dict.fromkeys(logicals)
+        }
 
     def _delete_gop(self, g: GopMeta) -> None:
         if g.joint_ref is not None:

@@ -106,11 +106,16 @@ class Catalog:
     # -- logical ---------------------------------------------------------
     def create_logical(self, name: str, budget_bytes: int) -> None:
         with self._lock:
-            self._conn.execute(
-                "INSERT INTO logical(name, created, budget_bytes,"
-                " original_physical) VALUES (?,?,?,NULL)",
-                (name, time.time(), budget_bytes),
-            )
+            try:
+                self._conn.execute(
+                    "INSERT INTO logical(name, created, budget_bytes,"
+                    " original_physical) VALUES (?,?,?,NULL)",
+                    (name, time.time(), budget_bytes),
+                )
+            except sqlite3.IntegrityError:
+                raise ValueError(
+                    f"{name!r} already exists (no-overwrite policy)"
+                ) from None
             self._conn.commit()
 
     def logical_exists(self, name: str) -> bool:
@@ -165,6 +170,28 @@ class Catalog:
             self._conn.execute("DELETE FROM logical WHERE name=?", (name,))
             self._conn.commit()
         return paths
+
+    def drop_empty_logicals(self) -> List[str]:
+        """Remove logical rows with no physical videos at all — the turd a
+        crashed (or abandoned) `VSSWriter` used to leave between logical
+        registration and its first flush.  Registration is now deferred to
+        the first flush, so surviving empty rows can only come from older
+        stores or a crash inside the first flush; the startup scavenger
+        calls this to clean both.  Logicals whose pages were evicted keep
+        their original physical row and are never touched here."""
+        with self._lock:
+            rows = self._conn.execute(
+                "SELECT name FROM logical WHERE name NOT IN"
+                " (SELECT DISTINCT logical FROM physical)"
+            ).fetchall()
+            names = [r[0] for r in rows]
+            if names:
+                self._conn.executemany(
+                    "DELETE FROM logical WHERE name=?",
+                    [(n,) for n in names],
+                )
+                self._conn.commit()
+        return names
 
     def set_original(self, name: str, physical_id: int) -> None:
         with self._lock:
@@ -271,6 +298,27 @@ class Catalog:
             )
             self._conn.commit()
             return cur.lastrowid
+
+    def add_gops(
+        self,
+        rows: Sequence[Tuple[int, int, int, int, int, str, int]],
+    ) -> List[int]:
+        """Batch-insert GOP rows — one transaction, one commit — for the
+        batched admission/ingest paths (`backend.batch_put` publishes the
+        objects first; these rows index them afterwards).  Each row is
+        (physical_id, index, start_frame, num_frames, nbytes, path,
+        lru_seq); returns the new GOP ids in order."""
+        ids: List[int] = []
+        with self._lock:
+            for (pid, idx, start, nframes, nbytes, path, lru_seq) in rows:
+                cur = self._conn.execute(
+                    "INSERT INTO gop(physical_id, idx, start_frame,"
+                    " num_frames, nbytes, path, lru_seq) VALUES (?,?,?,?,?,?,?)",
+                    (pid, idx, start, nframes, nbytes, path, lru_seq),
+                )
+                ids.append(cur.lastrowid)
+            self._conn.commit()
+        return ids
 
     def gops_for(self, physical_id: int) -> List[GopMeta]:
         with self._lock:

@@ -66,21 +66,31 @@ def compact(catalog: Catalog, logical: str, backend, max_pairs: int = 64) -> int
 
 
 def _merge(catalog: Catalog, a: PhysicalMeta, b: PhysicalMeta, backend):
-    """Append b's GOPs to a (re-key objects, then drop b's copies §5.3)."""
+    """Append b's GOPs to a (re-key objects, then drop b's copies §5.3).
+
+    The whole merge is batched through the backend: one ``batch_get``
+    of b's objects, one ``batch_put`` under the merged keys (sharded
+    backends fan both out), then the catalog rows move in one
+    transaction and the old keys retire.  Publish-before-index order is
+    preserved batch-wide — a crash anywhere in between leaves orphans
+    for the scavenger, never a dangling catalog row.
+    """
     a_gops = catalog.gops_for(a.physical_id)
     b_gops = catalog.gops_for(b.physical_id)
     next_idx = (max(g.index for g in a_gops) + 1) if a_gops else 0
     frame_offset = int(round((b.t_start - a.t_start) * a.fps))
-    for j, g in enumerate(b_gops):
-        new_key = f"{a.logical}/{a.physical_id}/{next_idx + j}.tvc"
-        # publish under the merged key first, then retire the old key —
-        # a crash in between leaves an orphan for the scavenger, never a
-        # dangling catalog row
-        backend.put(new_key, backend.get(g.path))
-        catalog.add_gop(
-            a.physical_id, next_idx + j, frame_offset + g.start_frame,
-            g.num_frames, g.nbytes, new_key, lru_seq=g.lru_seq,
-        )
+    new_keys = [
+        f"{a.logical}/{a.physical_id}/{next_idx + j}.tvc"
+        for j in range(len(b_gops))
+    ]
+    blobs = backend.batch_get([g.path for g in b_gops])
+    backend.batch_put(list(zip(new_keys, blobs)))
+    catalog.add_gops([
+        (a.physical_id, next_idx + j, frame_offset + g.start_frame,
+         g.num_frames, g.nbytes, new_keys[j], g.lru_seq)
+        for j, g in enumerate(b_gops)
+    ])
+    for g in b_gops:
         catalog.delete_gop(g.gop_id)
         backend.delete(g.path)
     catalog.extend_physical_time(a.physical_id, b.t_end)

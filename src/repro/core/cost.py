@@ -13,6 +13,19 @@ Look-back cost:   c_l(Ω, f) = |A − Ω| + η·|(Δ − A) − Ω|,  η = 1.45
 independent ones). For TVC, A = the I-frame of the GOP containing the
 fragment start and Δ−A = the P-frames preceding the start within that
 GOP; Ω is the set of frames already decoded by the previous selection.
+
+I/O cost (beyond-paper): the paper's c_t assumes uniform fragment
+fetch cost, which stops holding once GOP objects live on different
+storage tiers (memory hot tier, local volumes, sharded pools, remote
+stores).  ``io_cost(backend_kind, nbytes)`` prices the fetch as
+latency + nbytes/throughput per backend *kind* (the class a
+`StorageBackend.kind_for` reports), in the same relative units as α so
+it composes additively with transcode cost.  The shipped defaults come
+from fig22-style measurements (`benchmarks/fig22_backend_scaling.py`)
+normalized against the rgb→tvc-hi encode rate — small enough not to
+perturb transcode-vs-passthrough decisions, large enough that two
+otherwise-equal fragments resolve to the faster tier.  ``calibrate_io``
+re-measures the table on the install host's actual backends.
 """
 from __future__ import annotations
 
@@ -61,13 +74,32 @@ def _default_table() -> Dict[str, list]:
 
 FUSED_DISCOUNT = 0.65  # fused Pallas transcode vs staged decode→encode
 
+# Default per-backend I/O profiles: kind -> (per-object latency,
+# per-byte cost), in α's relative units (1.0 ≈ encoding one rgb pixel
+# to tvc-hi).  Ratios follow the fig22 sweep on a warm local disk:
+# memory serves from a dict (≈free next to any codec work); sharded
+# volumes amortize per-object latency across the thread-pool fan-out
+# the §3 multi-fragment plans trigger; remote object stores pay
+# round-trip latency plus WAN-ish throughput.
+DEFAULT_IO_TABLE: Dict[str, Tuple[float, float]] = {
+    "memory": (0.0, 1e-4),
+    "localfs": (2.0e3, 2e-2),
+    "sharded": (2.0e3, 1.2e-2),
+    "remote": (5.0e5, 2e-1),
+    "default": (2.0e3, 2e-2),
+}
+
 
 @dataclasses.dataclass
 class CostModel:
-    """α lookup with piecewise-linear interpolation over resolution."""
+    """α lookup with piecewise-linear interpolation over resolution,
+    plus the per-backend-kind I/O profile."""
 
     table: Dict[str, list]
     fused_transcode: bool = True
+    io_table: Dict[str, Tuple[float, float]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_IO_TABLE)
+    )
 
     @classmethod
     def default(cls) -> "CostModel":
@@ -75,10 +107,17 @@ class CostModel:
 
     @classmethod
     def load(cls, path: str) -> "CostModel":
-        return cls(json.loads(Path(path).read_text()))
+        obj = json.loads(Path(path).read_text())
+        if "alpha" in obj:  # current format: {"alpha": ..., "io": ...}
+            io = {k: tuple(v) for k, v in obj.get("io", {}).items()}
+            return cls(obj["alpha"], io_table={**DEFAULT_IO_TABLE, **io})
+        return cls(obj)  # legacy alpha-only table
 
     def save(self, path: str) -> None:
-        Path(path).write_text(json.dumps(self.table))
+        Path(path).write_text(json.dumps({
+            "alpha": self.table,
+            "io": {k: list(v) for k, v in self.io_table.items()},
+        }))
 
     def alpha(
         self, codec_in: str, codec_out: str, pixels_per_frame: int
@@ -112,6 +151,18 @@ class CostModel:
 
     def passthrough_cost(self, num_pixels: int) -> float:
         return self.PASSTHROUGH_ALPHA * num_pixels
+
+    def io_cost(
+        self, backend_kind: str, nbytes: int, objects: int = 1
+    ) -> float:
+        """Cost of fetching ``nbytes`` spread over ``objects`` GOP
+        objects from a backend of the given kind (latency + bytes over
+        throughput, in α's relative units)."""
+        profile = self.io_table.get(backend_kind)
+        if profile is None:
+            profile = self.io_table.get("default", (0.0, 0.0))
+        latency, per_byte = profile
+        return objects * latency + per_byte * nbytes
 
 
 def lookback_cost(
@@ -173,3 +224,70 @@ def calibrate(
     if save_path:
         model.save(save_path)
     return model
+
+
+def _reference_pixels_per_second(frames: int = 8, side: int = 128,
+                                 seed: int = 0) -> float:
+    """rgb→tvc-hi encode rate on this host — the normalization that puts
+    I/O seconds on the same relative scale as the α table (where that
+    conversion is 1.0 per pixel)."""
+    from repro import codec as _codec
+
+    rng = np.random.default_rng(seed)
+    clip = rng.integers(0, 256, (frames, side, side, 3)).astype(np.uint8)
+    _codec.encode_gop(clip, "tvc-hi")  # warm compile caches
+    t0 = time.perf_counter()
+    _codec.encode_gop(clip, "tvc-hi")
+    dt = max(time.perf_counter() - t0, 1e-9)
+    return clip.size / dt
+
+
+def calibrate_io(
+    backends: Dict[str, "object"],
+    *,
+    small_bytes: int = 4 << 10,
+    large_bytes: int = 4 << 20,
+    trials: int = 3,
+    reference_pixels_per_s: Optional[float] = None,
+    seed: int = 0,
+) -> Dict[str, Tuple[float, float]]:
+    """Measure per-backend-kind I/O profiles (the fig22 measurement as
+    an install-time step, mirroring ``calibrate`` for α).
+
+    For each ``{kind: StorageBackend}`` entry, times best-of-``trials``
+    gets of a small object (≈pure latency) and a large object
+    (≈throughput-bound), converts seconds to α's relative units via the
+    host's rgb→tvc-hi encode rate, and returns an ``io_table`` mapping
+    suitable for ``CostModel(..., io_table=...)``.  Calibration objects
+    are written under a reserved ``_calib/`` prefix and removed.
+    """
+    ref = reference_pixels_per_s or _reference_pixels_per_second(seed=seed)
+    rng = np.random.default_rng(seed)
+    out: Dict[str, Tuple[float, float]] = {}
+    for kind, backend in backends.items():
+        small = rng.integers(0, 256, small_bytes, dtype=np.uint8).tobytes()
+        large = rng.integers(0, 256, large_bytes, dtype=np.uint8).tobytes()
+        ks, kl = "_calib/small.bin", "_calib/large.bin"
+        backend.put(ks, small)
+        backend.put(kl, large)
+        try:
+            backend.get(ks), backend.get(kl)  # warm caches
+            t_small = min(
+                _timed(backend.get, ks) for _ in range(trials)
+            )
+            t_large = min(
+                _timed(backend.get, kl) for _ in range(trials)
+            )
+        finally:
+            backend.delete(ks)
+            backend.delete(kl)
+        per_byte_s = max(t_large - t_small, 0.0) / (large_bytes - small_bytes)
+        latency_s = max(t_small - per_byte_s * small_bytes, 0.0)
+        out[kind] = (latency_s * ref, per_byte_s * ref)
+    return out
+
+
+def _timed(fn, *args) -> float:
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0

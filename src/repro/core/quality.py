@@ -111,17 +111,30 @@ class QualityEstimator:
         scale_from: float,
         scale_to: float,
         out_codec: str,
+        fragment_codec: Optional[str] = None,
     ) -> float:
         """Excess MSE bound of (fragment → rescale → re-encode) vs
         serving the same read from m0.
 
         The requested output codec's quantization error is paid by
         *every* candidate (m0 included) and therefore cancels in the
-        relative quality u — only the fragment's accumulated bound plus
-        any upsample penalty is charged.
+        relative quality u.  For a first-generation fragment (parent is
+        m0) whose codec *matches* the output codec, the accumulated
+        bound IS that quantization error, so it cancels and only an
+        upsample penalty remains; under a codec mismatch nothing
+        cancels — the fragment's own error is carried into an output
+        the requester expected at full quality — so the bound is
+        charged in full.  (Without ``fragment_codec`` the historical
+        matched-codec behaviour is kept.)  Chains of length ≥2 pay the
+        §3.2 transitive factor-2 bound as before.
         """
-        del out_codec  # paid equally by all candidates; see docstring
         step = self.resample_mse(scale_from, scale_to)
+        if fragment_is_from_original:
+            if fragment_codec is not None and (
+                canonical_codec(fragment_codec) != canonical_codec(out_codec)
+            ):
+                return fragment_bound + step
+            return step  # bound ≈ out-codec quantization: cancels
         return chain_mse_bound(fragment_bound, step, fragment_is_from_original)
 
     def admissible(
@@ -133,10 +146,12 @@ class QualityEstimator:
         scale_to: float,
         out_codec: str,
         eps_db: float,
+        fragment_codec: Optional[str] = None,
     ) -> bool:
         mse = self.predicted_fragment_mse(
             fragment_bound, fragment_is_from_original,
             scale_from=scale_from, scale_to=scale_to, out_codec=out_codec,
+            fragment_codec=fragment_codec,
         )
         return mse_to_psnr(mse) >= eps_db
 

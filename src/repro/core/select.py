@@ -16,6 +16,15 @@ the decoded set). The paper solves this with Z3; we ship:
   * ``solve_greedy`` — the paper's dependency-naïve baseline (min c_t
     per segment, look-back ignored at choice time but paid at replay),
   * ``solve_brute``  — exponential oracle for tests.
+
+Joint multi-request planning (beyond-paper): ``VSS.read_batch`` builds
+ONE problem per logical video covering the *union* of every concurrent
+request's segments — each request's endpoints become transition points,
+``demands`` records how many requests need each segment, and a fragment
+chosen once serves every overlapping request (decode/transcode is paid
+once over the union, which is exactly the existing objective on the
+bigger problem).  ``restrict_to_segments`` then slices the joint
+solution back into one per-request plan.
 """
 from __future__ import annotations
 
@@ -37,10 +46,19 @@ class SegmentChoice:
 class SelectionProblem:
     segments: List[Tuple[float, float]]  # consecutive [t0, t1) intervals
     choices: List[List[SegmentChoice]]  # per segment, ≥1 each
+    # joint batch plans: how many concurrent requests need each segment
+    # (None = single-request problem; sharing means a chosen fragment
+    # is decoded once however many requests demand the segment, so the
+    # solvers' objective is unchanged — demands is bookkeeping for
+    # restriction, introspection and tests)
+    demands: Optional[List[int]] = None
 
     def __post_init__(self):
         assert len(self.segments) == len(self.choices)
         assert all(self.choices), "every segment needs at least one choice"
+        if self.demands is not None:
+            assert len(self.demands) == len(self.segments)
+            assert all(d >= 1 for d in self.demands)
 
 
 @dataclasses.dataclass
@@ -63,6 +81,33 @@ def replay_cost(problem: SelectionProblem, assignment: Sequence[int]) -> float:
             total += ch.lookback
         prev_video = ch.video_idx
     return total
+
+
+def restrict_to_segments(
+    problem: SelectionProblem,
+    selection: Selection,
+    indices: Sequence[int],
+) -> Tuple[SelectionProblem, Selection]:
+    """Slice a solved joint problem down to one request's segments.
+
+    ``indices`` must be increasing positions into ``problem.segments``
+    (a request's own interval is a contiguous run of joint segments —
+    its endpoints are transition points of the joint problem).  The
+    returned selection keeps the joint assignment, so fragments shared
+    across requests stay shared; its cost is the standalone replay cost
+    of the slice (look-back at the slice boundary is charged even when
+    the joint plan continued the same video — the conservative
+    per-request view of a shared decode).
+    """
+    segs = [problem.segments[i] for i in indices]
+    choices = [problem.choices[i] for i in indices]
+    demands = (
+        [problem.demands[i] for i in indices]
+        if problem.demands is not None else None
+    )
+    sub = SelectionProblem(segs, choices, demands)
+    assignment = [selection.assignment[i] for i in indices]
+    return sub, Selection(assignment, replay_cost(sub, assignment))
 
 
 def solve_greedy(problem: SelectionProblem) -> Selection:

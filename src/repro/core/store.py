@@ -1,17 +1,30 @@
 """VSS — the storage manager (paper Figure 1 API).
 
-``write(name, S, T, P, data)`` / ``read(name, S, T, P)`` over logical
-videos; physical layout, caching, transcoding and eviction are invisible
-to callers. Reads are planned over *all* cached materialized views with
-the §3 cost model and executed fragment-by-fragment; results are
-(optionally) admitted to the cache, budgets enforced via LRU_VSS,
-deferred compression and compaction run as side effects — the full §2-§5
-pipeline.
+The public surface is declarative: callers build immutable
+`repro.core.spec.ReadSpec` / `WriteSpec` values stating *what* view
+they want (interval, resolution, ROI, fps, codec, quality) and the §3
+planner decides *how* to materialize it.  ``read_spec``/``write_spec``/
+``writer_spec`` take specs; the classic nine-keyword ``read()`` and
+``write()``/``writer()`` remain as thin compatibility shims that build
+the spec for you and go through the exact same planner.
+
+``read_batch(specs)`` is the multi-request entry point a VDBMS issues
+concurrent queries through: specs are grouped by logical video and
+view configuration, ONE `SelectionProblem` per video covers the union
+of every request's segments (a fragment chosen once serves every
+overlapping request), GOP fetches are deduplicated across requests and
+issued as a single ``backend.batch_get`` per plan, each GOP is decoded
+at most once per batch, and cache admissions share one eviction pass
+per video.  Plans price fragment I/O per storage tier via
+``CostModel.io_cost`` + ``backend.kind_for``, so batched plans prefer
+fragments on faster tiers.
 
 Writes are streaming and non-blocking: ``writer()`` returns a handle
-whose flushed GOPs become immediately queryable (prefix reads of a video
-still being written are supported); visibility of the *final* GOP is
-only guaranteed after ``close()``, matching the paper's caveat.
+whose flushed GOPs become immediately queryable (prefix reads of a
+video still being written are supported); visibility of the *final*
+GOP is only guaranteed after ``close()``, matching the paper's caveat.
+The logical-video row is registered at the FIRST flush, not at handle
+creation, so an abandoned writer leaves nothing behind.
 
 GOP payload bytes never touch the filesystem here: every object moves
 through a `repro.storage.StorageBackend` (``backend=`` parameter, spec
@@ -42,8 +55,10 @@ from repro.core.select import (
     SegmentChoice,
     Selection,
     SelectionProblem,
+    restrict_to_segments,
     solve,
 )
+from repro.core.spec import ReadSpec, ResolvedRead, WriteSpec
 from repro.core.types import (
     DEFAULT_QUALITY_EPS_DB,
     Box,
@@ -56,6 +71,8 @@ from repro.core.types import (
 )
 
 DEFAULT_BUDGET_MULTIPLE = 10.0  # §4 administrator default
+BULK_WRITE_BATCH_GOPS = 8  # GOPs per batch_put in the non-streaming path
+_EPS = 1e-9
 
 
 @dataclasses.dataclass
@@ -114,6 +131,69 @@ class Run:
         return self.gops[-1].end_time(self.physical.fps, self.physical.t_start)
 
 
+class _CatalogSnapshot:
+    """One catalog round-trip per (video, table) per batch: candidate
+    generation for N concurrent specs on the same video shares these
+    lookups instead of re-querying SQLite N times."""
+
+    def __init__(self, catalog: Catalog):
+        self.catalog = catalog
+        self._originals: Dict[str, PhysicalMeta] = {}
+        self._physicals: Dict[str, List[PhysicalMeta]] = {}
+        self._gops: Dict[int, List[GopMeta]] = {}
+
+    def original(self, name: str) -> PhysicalMeta:
+        if name not in self._originals:
+            oid = self.catalog.get_original_id(name)
+            if oid is None:
+                raise KeyError(f"unknown logical video {name!r}")
+            self._originals[name] = self.catalog.get_physical(oid)
+        return self._originals[name]
+
+    def physicals(self, name: str) -> List[PhysicalMeta]:
+        if name not in self._physicals:
+            self._physicals[name] = self.catalog.physicals_for(name)
+        return self._physicals[name]
+
+    def gops(self, physical_id: int) -> List[GopMeta]:
+        if physical_id not in self._gops:
+            self._gops[physical_id] = self.catalog.gops_for(physical_id)
+        return self._gops[physical_id]
+
+
+class _BatchIO:
+    """Cross-request fetch/decode dedupe for one ``read_batch`` call.
+
+    ``prefetch`` pulls every (deduplicated) GOP key a plan group needs
+    in ONE ``backend.batch_get`` — the §3 multi-fragment I/O overlap,
+    now spanning requests instead of one request's fragments.  Blobs
+    and decoded frames live for the duration of the batch, so a GOP
+    shared by several overlapping specs is fetched once and decoded
+    once."""
+
+    def __init__(self, backend: _storage.StorageBackend):
+        self.backend = backend
+        self.blobs: Dict[str, bytes] = {}
+        self.decoded: Dict[int, np.ndarray] = {}  # gop_id -> frames
+        self.objects_fetched = 0
+
+    def prefetch(self, keys: Sequence[str]) -> None:
+        missing = [k for k in dict.fromkeys(keys) if k not in self.blobs]
+        if missing:
+            self.blobs.update(zip(missing, self.backend.batch_get(missing)))
+            self.objects_fetched += len(missing)
+
+    def get(self, key: str) -> bytes:
+        if key not in self.blobs:
+            self.blobs[key] = self.backend.get(key)
+            self.objects_fetched += 1
+        return self.blobs[key]
+
+    def batch_get(self, keys: Sequence[str]) -> List[bytes]:
+        self.prefetch(keys)
+        return [self.blobs[k] for k in keys]
+
+
 class VSS:
     def __init__(
         self,
@@ -165,6 +245,9 @@ class VSS:
             self.recovery = _storage.RecoveryReport()
         else:
             self.recovery = self.backend.recover(self.catalog)
+            # writers register their logical row at first flush; a row
+            # with no physicals is a pre-flush crash turd — drop it
+            self.catalog.drop_empty_logicals()
         self.catalog.set_meta("clean_shutdown", "0")
         self.budget_multiple = budget_multiple
         self.solver = solver
@@ -182,6 +265,29 @@ class VSS:
     # ------------------------------------------------------------------
     # write path
     # ------------------------------------------------------------------
+    def writer_spec(
+        self, spec: WriteSpec, *, batch_gops: int = 1
+    ) -> "VSSWriter":
+        """Open a streaming writer for ``spec``.  ``batch_gops`` > 1
+        buffers encoded GOPs and publishes them through one
+        ``backend.batch_put`` per window (amortized I/O + one catalog
+        transaction) at the cost of prefix-visibility granularity."""
+        if not isinstance(spec, WriteSpec):
+            raise TypeError(f"writer_spec takes a WriteSpec, got {spec!r}")
+        if self.catalog.logical_exists(spec.name):
+            raise ValueError(
+                f"{spec.name!r} already exists (no-overwrite policy)"
+            )
+        return VSSWriter(self, spec, batch_gops=batch_gops)
+
+    def write_spec(self, spec: WriteSpec, frames: np.ndarray) -> PhysicalMeta:
+        """Bulk write: all of ``frames`` under one spec (GOP publishes
+        are batched — nothing needs to be queryable mid-write)."""
+        w = self.writer_spec(spec, batch_gops=BULK_WRITE_BATCH_GOPS)
+        w.append(frames)
+        return w.close()
+
+    # -- keyword compatibility shims ---------------------------------------
     def writer(
         self,
         name: str,
@@ -192,14 +298,10 @@ class VSS:
         budget_bytes: Optional[int] = None,
         t_start: float = 0.0,
     ) -> "VSSWriter":
-        codec = _codec.canonical_codec(codec)
-        if self.catalog.logical_exists(name):
-            raise ValueError(f"{name!r} already exists (no-overwrite policy)")
-        self.catalog.create_logical(name, budget_bytes or 0)
-        return VSSWriter(
-            self, name, fps=fps, codec=codec, gop_frames=gop_frames,
+        return self.writer_spec(WriteSpec(
+            name=name, fps=fps, codec=codec, gop_frames=gop_frames,
             budget_bytes=budget_bytes, t_start=t_start,
-        )
+        ))
 
     def write(
         self,
@@ -211,16 +313,17 @@ class VSS:
         gop_frames: Optional[int] = None,
         budget_bytes: Optional[int] = None,
     ) -> PhysicalMeta:
-        w = self.writer(
-            name, fps=fps, codec=codec, gop_frames=gop_frames,
+        return self.write_spec(WriteSpec(
+            name=name, fps=fps, codec=codec, gop_frames=gop_frames,
             budget_bytes=budget_bytes,
-        )
-        w.append(frames)
-        return w.close()
+        ), frames)
 
     # ------------------------------------------------------------------
     # read path (§3)
     # ------------------------------------------------------------------
+    def read_spec(self, spec: ReadSpec) -> ReadResult:
+        return self.read_batch([spec])[0]
+
     def read(
         self,
         name: str,
@@ -234,78 +337,179 @@ class VSS:
         cache: bool = True,
         method: Optional[str] = None,
     ) -> ReadResult:
+        """Keyword compatibility shim over ``read_spec``."""
+        return self.read_spec(ReadSpec(
+            name=name, t=t, resolution=resolution, roi=roi, fps=fps,
+            codec=codec, quality_eps_db=quality_eps_db, cache=cache,
+            method=method,
+        ))
+
+    def read_batch(self, specs: Sequence[ReadSpec]) -> List[ReadResult]:
+        """Plan and execute many reads jointly (order-preserving).
+
+        Specs are grouped by (video, view configuration); each group is
+        planned as ONE `SelectionProblem` over the union of its
+        intervals, every plan's GOP keys are prefetched in a single
+        ``backend.batch_get``, each GOP is decoded at most once per
+        batch, exact-duplicate specs share one execution, and cache
+        admissions run one eviction/compaction pass per video.  Raises
+        on the first failing spec (same exceptions the single-read path
+        raises for that spec)."""
+        specs = list(specs)
+        for sp in specs:
+            if not isinstance(sp, ReadSpec):
+                raise TypeError(f"read_batch takes ReadSpecs, got {sp!r}")
+        if not specs:
+            return []
         self.deferred.mark_busy()
         try:
-            return self._read(
-                name, t=t, resolution=resolution, roi=roi, fps=fps,
-                codec=codec, quality_eps_db=quality_eps_db, cache=cache,
-                method=method,
-            )
+            return self._read_batch(specs)
         finally:
             self.deferred.mark_idle()
 
-    def _read(self, name, *, t, resolution, roi, fps, codec,
-              quality_eps_db, cache, method) -> ReadResult:
-        out_codec = _codec.canonical_codec(codec)
-        original = self._original(name)
-        t = t or (original.t_start, original.t_end)
-        s, e = t
-        eps = 1e-9
-        if s < original.t_start - eps or e > original.t_end + eps:
-            raise ValueError(
-                f"read [{s},{e}) outside original interval"
-                f" [{original.t_start},{original.t_end})"
-            )
-        if e <= s:
-            raise ValueError("empty read interval")
-        roi = roi or original.roi
-        out_fps = fps or original.fps
-        rw, rh = roi[2] - roi[0], roi[3] - roi[1]
-        resolution = resolution or (
-            int(round(rw * original.scale)), int(round(rh * original.scale))
-        )
-        scale_to = resolution[0] / rw
+    def _read_batch(self, specs: List[ReadSpec]) -> List[ReadResult]:
+        snap = _CatalogSnapshot(self.catalog)
+        resolved = [sp.resolve(snap.original(sp.name)) for sp in specs]
 
-        # 1-2. candidates + admission (quality model §3.2)
-        runs = self._candidate_runs(
-            name, s, e, roi, out_fps, out_codec, scale_to, quality_eps_db
-        )
-        if not runs:
-            raise RuntimeError("no admissible fragments cover the read")
+        # -- plan: one joint problem per (video, view-config) group --------
+        groups: Dict[tuple, List[int]] = {}
+        for i, r in enumerate(resolved):
+            groups.setdefault(r.plan_key(), []).append(i)
+        plans: List[Optional[ReadPlan]] = [None] * len(specs)
+        for members in groups.values():
+            for i, plan in zip(
+                members,
+                self._plan_group([resolved[i] for i in members], snap),
+            ):
+                plans[i] = plan
 
-        # 3-5. transition points → segments → costs → solver
-        t0 = time.perf_counter()
-        problem, segs = self._build_problem(
-            runs, s, e, out_codec, out_fps, scale_to, roi
-        )
-        selection = solve(problem, method or self.solver)
-        plan_seconds = time.perf_counter() - t0
-        plan = ReadPlan(segs, problem, selection, runs, plan_seconds)
-
-        # 6-8. execute (same-codec cached fragments pass through without
-        # decode→re-encode; everything else goes through pixels)
-        frames = None
-        encoded = None
-        if out_codec != "rgb":
-            encoded = self._execute_encoded(
-                plan, roi, resolution, out_fps, out_codec, scale_to
-            )
+        # -- prefetch: one batch_get per plan group, deduped per video.
+        # A single-spec batch (the read()/read_spec path) skips the
+        # batch caches entirely: there is nothing to share, and the
+        # pre-batch per-run-group fetch pattern has the lower peak
+        # memory (no blob/decode retention across the call).
+        ios: Dict[str, Optional[_BatchIO]] = {}
+        if len(specs) > 1:
+            for name in dict.fromkeys(r.name for r in resolved):
+                ios[name] = _BatchIO(self.backend)
+            for key, members in groups.items():
+                keys: List[str] = []
+                for i in members:
+                    keys.extend(
+                        self._plan_object_keys(plans[i], resolved[i])
+                    )
+                ios[resolved[members[0]].name].prefetch(keys)
         else:
-            frames = self._execute(plan, roi, resolution, out_fps)
-            if self.enable_deferred:
-                self.deferred.on_uncompressed_read(name)
+            ios[resolved[0].name] = None
 
-        # 9. cache admission + eviction (§4)
-        if cache:
+        # -- execute: duplicates share one materialization -----------------
+        done: Dict[tuple, Tuple[Optional[np.ndarray], Optional[list]]] = {}
+        results: List[Optional[ReadResult]] = [None] * len(specs)
+        for i, r in enumerate(resolved):
+            plan, io = plans[i], ios[r.name]
+            rkey = r.result_key()
+            if rkey in done:
+                frames, encoded = done[rkey]
+                # duplicates share the execution, not the buffers: each
+                # result stays independently mutable, as it would be
+                # from sequential reads
+                frames = None if frames is None else frames.copy()
+                encoded = None if encoded is None else list(encoded)
+            elif r.codec != "rgb":
+                frames = None
+                encoded = self._execute_encoded(
+                    plan, r.roi, r.resolution, r.fps, r.codec, r.scale_to, io
+                )
+                done[rkey] = (frames, encoded)
+            else:
+                encoded = None
+                frames = self._execute(plan, r.roi, r.resolution, r.fps, io)
+                done[rkey] = (frames, encoded)
+                if self.enable_deferred:
+                    self.deferred.on_uncompressed_read(r.name)
+            results[i] = ReadResult(frames, r.codec, encoded, plan, r.fps)
+
+        # -- cache admission + batched eviction/compaction (§4) ------------
+        admitted_names: List[str] = []
+        admitted_keys: set = set()
+        for i, r in enumerate(resolved):
+            if not specs[i].cache or r.result_key() in admitted_keys:
+                continue
+            admitted_keys.add(r.result_key())
+            out = results[i]
             self._admit(
-                name, frames, encoded, s, e, roi, resolution, out_fps,
-                out_codec, plan,
+                r.name, out._frames, out.encoded, r.s, r.e, r.roi,
+                r.resolution, r.fps, r.codec, plans[i],
             )
-            self.cache.maybe_evict(name)
+            admitted_names.append(r.name)
+        if admitted_names:
+            self.cache.evict_for_batch(admitted_names)
             if self.enable_compaction:
-                _compact.compact(self.catalog, name, self.backend)
+                for name in dict.fromkeys(admitted_names):
+                    _compact.compact(self.catalog, name, self.backend)
 
-        return ReadResult(frames, out_codec, encoded, plan, out_fps)
+        return results
+
+    # -- joint planning ----------------------------------------------------
+    def _plan_group(
+        self, members: List[ResolvedRead], snap: _CatalogSnapshot
+    ) -> List[ReadPlan]:
+        """Plan every member of one (video, view-config) group.
+
+        Overlapping/touching member intervals merge into components;
+        each component gets ONE problem over the union of its members'
+        segments, solved once, then restricted back to per-member
+        plans — a fragment the solver picks for a shared segment serves
+        every member that demanded it."""
+        r0 = members[0]
+        order = sorted(range(len(members)), key=lambda i: members[i].s)
+        components: List[Tuple[float, float, List[int]]] = []
+        for i in order:
+            m = members[i]
+            if components and m.s <= components[-1][1] + _EPS:
+                cs, ce, idxs = components[-1]
+                components[-1] = (cs, max(ce, m.e), idxs + [i])
+            else:
+                components.append((m.s, m.e, [i]))
+
+        plans: List[Optional[ReadPlan]] = [None] * len(members)
+        for cs, ce, idxs in components:
+            t0 = time.perf_counter()
+            runs = self._candidate_runs(
+                r0.name, cs, ce, r0.roi, r0.fps, r0.codec, r0.scale_to,
+                r0.spec.quality_eps_db, snap,
+            )
+            if not runs:
+                raise RuntimeError("no admissible fragments cover the read")
+            intervals = [(members[i].s, members[i].e) for i in idxs]
+            problem, segs = self._build_joint_problem(
+                runs, intervals, cs, ce, r0.codec, r0.fps, r0.scale_to,
+                r0.roi,
+            )
+            selection = solve(problem, r0.spec.method or self.solver)
+            plan_seconds = time.perf_counter() - t0
+            for i in idxs:
+                m = members[i]
+                indices = [
+                    k for k, (a, b) in enumerate(segs)
+                    if a >= m.s - _EPS and b <= m.e + _EPS
+                ]
+                if not indices:
+                    # the member's whole interval fell below the sliver
+                    # filter inside a larger component: re-plan it alone
+                    # so the single-read fallback (one segment spanning
+                    # exactly [s, e)) applies — never serve a
+                    # neighbouring segment's frames
+                    plans[i] = self._plan_group([m], snap)[0]
+                    continue
+                sub_problem, sub_sel = restrict_to_segments(
+                    problem, selection, indices
+                )
+                plans[i] = ReadPlan(
+                    list(sub_problem.segments), sub_problem, sub_sel, runs,
+                    plan_seconds,
+                )
+        return plans
 
     # -- candidates ------------------------------------------------------
     def _original(self, name: str) -> PhysicalMeta:
@@ -315,10 +519,12 @@ class VSS:
         return self.catalog.get_physical(oid)
 
     def _candidate_runs(
-        self, name, s, e, roi, out_fps, out_codec, scale_to, eps_db
+        self, name, s, e, roi, out_fps, out_codec, scale_to, eps_db,
+        snap: Optional[_CatalogSnapshot] = None,
     ) -> List[Run]:
+        snap = snap or _CatalogSnapshot(self.catalog)
         runs: List[Run] = []
-        for p in self.catalog.physicals_for(name):
+        for p in snap.physicals(name):
             if not p.covers_roi(roi):
                 continue
             if p.fps < out_fps or (p.fps / out_fps) % 1.0 > 1e-9:
@@ -327,9 +533,10 @@ class VSS:
                 p.mse_bound, p.is_original or p.parent_is_original,
                 scale_from=p.scale, scale_to=scale_to,
                 out_codec=out_codec, eps_db=eps_db,
+                fragment_codec=p.codec,
             ):
                 continue
-            gops = self.catalog.gops_for(p.physical_id)
+            gops = snap.gops(p.physical_id)
             # split into contiguous runs (eviction leaves gaps)
             cur: List[GopMeta] = []
             for g in gops:
@@ -360,13 +567,25 @@ class VSS:
             and tuple(p.roi) == tuple(roi)
         )
 
-    def _build_problem(
-        self, runs: List[Run], s, e, out_codec, out_fps, scale_to, roi
+    def _build_joint_problem(
+        self, runs: List[Run], intervals: List[Tuple[float, float]],
+        cs, ce, out_codec, out_fps, scale_to, roi,
     ) -> Tuple[SelectionProblem, List[Tuple[float, float]]]:
-        pts = {s, e}
+        """One problem covering the union [cs, ce) of ``intervals``.
+
+        Transition points are run boundaries AND every request's
+        endpoints (so per-request restriction falls on segment
+        boundaries); ``demands`` counts the requests needing each
+        segment.  With a single interval this reduces exactly to the
+        single-read §3.1 construction."""
+        pts = {cs, ce}
         for r in runs:
             for t in (r.t_start, r.t_end):
-                if s < t < e:
+                if cs < t < ce:
+                    pts.add(t)
+        for (s, e) in intervals:
+            for t in (s, e):
+                if cs < t < ce:
                     pts.add(t)
         pts = sorted(pts)
         # fractional cached-view boundaries can create sub-frame slivers
@@ -376,7 +595,7 @@ class VSS:
             (a, b) for a, b in zip(pts[:-1], pts[1:]) if b - a >= min_dur
         ]
         if not segments:
-            segments = [(s, e)]
+            segments = [(cs, ce)]
         choices: List[List[SegmentChoice]] = []
         for (a, b) in segments:
             segment_choices = []
@@ -393,7 +612,12 @@ class VSS:
                     " violated"
                 )
             choices.append(segment_choices)
-        return SelectionProblem(segments, choices), segments
+        demands = [
+            sum(1 for (s, e) in intervals
+                if a >= s - _EPS and b <= e + _EPS) or 1
+            for (a, b) in segments
+        ]
+        return SelectionProblem(segments, choices, demands), segments
 
     def _choice_for(self, vi, run: Run, a, b, out_codec, out_fps, scale_to,
                     roi) -> SegmentChoice:
@@ -407,6 +631,21 @@ class VSS:
             c_t = self.cost_model.transcode_cost(
                 p.codec, out_codec, frames * ppf, ppf
             )
+        # backend-aware I/O (beyond-paper): price fetching this
+        # fragment's GOP objects from whatever tier currently serves
+        # them, so otherwise-equal candidates resolve to the faster
+        # one.  A GOP straddling several segments is fetched once, so
+        # its cost is amortized by frame overlap — summed over the
+        # run's segments it charges the full fetch exactly once.
+        f0, f1 = self._clamp_frames(run, p.frame_at(a), p.frame_at(b))
+        for g in run.gops:
+            ov = min(g.start_frame + g.num_frames, f1) - max(
+                g.start_frame, f0
+            )
+            if ov > 0 and g.joint_ref is None:
+                c_t += (ov / g.num_frames) * self.cost_model.io_cost(
+                    self.backend.kind_for(g.path), g.nbytes
+                )
         # look-back (§3.1): frames from the containing GOP's start to the
         # entry frame must be decoded if we *enter* the video here.
         lookback = 0.0
@@ -438,13 +677,29 @@ class VSS:
         return run.gops[-1]
 
     # -- execution ---------------------------------------------------------
-    def _execute(
-        self, plan: ReadPlan, roi: Box, resolution, out_fps
-    ) -> np.ndarray:
-        pieces: List[np.ndarray] = []
-        touched: List[int] = []
-        # group consecutive segments served by the same run so the decode
-        # chain is walked once per contiguous selection
+    def _plan_object_keys(
+        self, plan: ReadPlan, r: ResolvedRead
+    ) -> List[str]:
+        """Every plain-GOP object key this plan's execution will touch
+        (jointly-compressed GOPs reconstruct through their own segment
+        objects and are skipped)."""
+        keys: List[str] = []
+        for run_idx, a, b in self._grouped_segments(plan):
+            run = plan.runs[run_idx]
+            f0, f1 = self._clamp_frames(
+                run, run.physical.frame_at(a), run.physical.frame_at(b)
+            )
+            keys.extend(
+                g.path for g in run.gops
+                if g.start_frame < f1 and g.start_frame + g.num_frames > f0
+                and g.joint_ref is None
+            )
+        return keys
+
+    @staticmethod
+    def _grouped_segments(plan: ReadPlan) -> List[Tuple[int, float, float]]:
+        """Consecutive segments served by the same run, merged, so the
+        decode chain is walked once per contiguous selection."""
         grouped: List[Tuple[int, float, float]] = []
         for i, (a, b) in enumerate(plan.segments):
             run_idx = plan.run_idx(i)
@@ -454,9 +709,19 @@ class VSS:
                 grouped[-1] = (run_idx, grouped[-1][1], b)
             else:
                 grouped.append((run_idx, a, b))
-        for run_idx, a, b in grouped:
+        return grouped
+
+    def _execute(
+        self, plan: ReadPlan, roi: Box, resolution, out_fps,
+        io: Optional[_BatchIO] = None,
+    ) -> np.ndarray:
+        pieces: List[np.ndarray] = []
+        touched: List[int] = []
+        for run_idx, a, b in self._grouped_segments(plan):
             run = plan.runs[run_idx]
-            piece, gop_ids = self._extract(run, a, b, roi, resolution, out_fps)
+            piece, gop_ids = self._extract(
+                run, a, b, roi, resolution, out_fps, io
+            )
             pieces.append(piece)
             touched.extend(gop_ids)
         self.catalog.touch_gops(touched)
@@ -464,29 +729,20 @@ class VSS:
 
     def _execute_encoded(
         self, plan: ReadPlan, roi: Box, resolution, out_fps, out_codec,
-        scale_to,
+        scale_to, io: Optional[_BatchIO] = None,
     ) -> List[_codec.EncodedGOP]:
         """Produce the encoded result; same-codec fragments pass through."""
-        grouped: List[Tuple[int, float, float]] = []
-        for i, (a, b) in enumerate(plan.segments):
-            run_idx = plan.run_idx(i)
-            if grouped and grouped[-1][0] == run_idx and abs(
-                grouped[-1][2] - a
-            ) < 1e-9:
-                grouped[-1] = (run_idx, grouped[-1][1], b)
-            else:
-                grouped.append((run_idx, a, b))
         out: List[_codec.EncodedGOP] = []
         touched: List[int] = []
-        for run_idx, a, b in grouped:
+        for run_idx, a, b in self._grouped_segments(plan):
             run = plan.runs[run_idx]
             if self._passthrough_ok(run.physical, out_codec, out_fps,
                                     scale_to, roi):
-                encs, gop_ids = self._extract_encoded(run, a, b, out_codec)
+                encs, gop_ids = self._extract_encoded(run, a, b, out_codec, io)
                 out.extend(encs)
             else:
                 piece, gop_ids = self._extract(
-                    run, a, b, roi, resolution, out_fps
+                    run, a, b, roi, resolution, out_fps, io
                 )
                 out.extend(
                     _codec.encode_gop(chunk, out_codec,
@@ -498,7 +754,7 @@ class VSS:
         return out
 
     def _extract_encoded(
-        self, run: Run, a, b, out_codec
+        self, run: Run, a, b, out_codec, io: Optional[_BatchIO] = None,
     ) -> Tuple[List[_codec.EncodedGOP], List[int]]:
         """Byte-level GOP pass-through; partial edge GOPs are trimmed
         through a decode→re-encode of just that GOP."""
@@ -512,12 +768,12 @@ class VSS:
                 continue
             gop_ids.append(g.gop_id)
             if gs >= f0 and ge <= f1:  # fully inside: verbatim bytes
-                data = self.backend.get(g.path)
+                data = (io or self.backend).get(g.path)
                 if is_wrapped(data):
                     data = unwrap_bytes(data)
                 out.append(_codec.deserialize_gop(data))
             else:  # edge GOP: decode, trim, re-encode (the look-back cost)
-                frames = self._load_gop_frames(g)
+                frames = self._load_gop_frames(g, io)
                 lo = max(f0 - gs, 0)
                 hi = min(f1, ge) - gs
                 out.append(
@@ -527,7 +783,8 @@ class VSS:
         return out, gop_ids
 
     def _extract(
-        self, run: Run, a, b, roi: Box, resolution, out_fps
+        self, run: Run, a, b, roi: Box, resolution, out_fps,
+        io: Optional[_BatchIO] = None,
     ) -> Tuple[np.ndarray, List[int]]:
         p = run.physical
         f0, f1 = self._clamp_frames(run, p.frame_at(a), p.frame_at(b))
@@ -535,7 +792,7 @@ class VSS:
             g for g in run.gops
             if g.start_frame < f1 and g.start_frame + g.num_frames > f0
         ]
-        frames = np.concatenate(self._load_gops_frames(gops), axis=0)
+        frames = np.concatenate(self._load_gops_frames(gops, io), axis=0)
         base = gops[0].start_frame
         frames = frames[f0 - base : f1 - base]
         # frame-rate division
@@ -558,27 +815,48 @@ class VSS:
         enc = _codec.deserialize_gop(data)
         return _codec.decode_gop(enc, use_pallas=self.use_pallas)
 
-    def _load_gop_frames(self, g: GopMeta) -> np.ndarray:
+    def _load_gop_frames(
+        self, g: GopMeta, io: Optional[_BatchIO] = None
+    ) -> np.ndarray:
+        if io is not None and g.gop_id in io.decoded:
+            return io.decoded[g.gop_id]
         if g.joint_ref is not None:
             from repro.core import joint as _joint
 
-            return _joint.reconstruct_gop(self, g)
-        return self._decode_gop_bytes(self.backend.get(g.path))
+            frames = _joint.reconstruct_gop(self, g)
+        else:
+            frames = self._decode_gop_bytes((io or self.backend).get(g.path))
+        if io is not None:
+            io.decoded[g.gop_id] = frames
+        return frames
 
-    def _load_gops_frames(self, gops: Sequence[GopMeta]) -> List[np.ndarray]:
+    def _load_gops_frames(
+        self, gops: Sequence[GopMeta], io: Optional[_BatchIO] = None
+    ) -> List[np.ndarray]:
         """Load many GOPs' frames; plain payloads go through one
-        ``batch_get`` so sharded/remote backends overlap the I/O."""
-        plain = [g for g in gops if g.joint_ref is None]
+        ``batch_get`` so sharded/remote backends overlap the I/O.  With
+        a batch context, blobs and decoded frames are shared across
+        every request in the batch (each GOP decodes at most once)."""
+        plain = [
+            g for g in gops
+            if g.joint_ref is None
+            and not (io is not None and g.gop_id in io.decoded)
+        ]
         blobs = dict(zip(
             (g.gop_id for g in plain),
-            self.backend.batch_get([g.path for g in plain]),
+            (io or self.backend).batch_get([g.path for g in plain]),
         ))
         out: List[np.ndarray] = []
         for g in gops:
-            if g.joint_ref is not None:
-                out.append(self._load_gop_frames(g))
+            if io is not None and g.gop_id in io.decoded:
+                out.append(io.decoded[g.gop_id])
+            elif g.joint_ref is not None:
+                out.append(self._load_gop_frames(g, io))
             else:
-                out.append(self._decode_gop_bytes(blobs[g.gop_id]))
+                frames = self._decode_gop_bytes(blobs[g.gop_id])
+                if io is not None:
+                    io.decoded[g.gop_id] = frames
+                out.append(frames)
         return out
 
     # ------------------------------------------------------------------
@@ -660,30 +938,33 @@ class VSS:
         )
         tick = self.catalog.lru_clock()
         if encoded is not None:
+            chunks = [
+                (enc, _codec.serialize_gop(enc)) for enc in encoded
+            ]
+            starts: List[int] = []
             start = 0
-            for i, enc in enumerate(encoded):
-                key = f"{name}/{pid}/{i}.tvc"
-                data = _codec.serialize_gop(enc)
-                # publish-then-index: the object is durable (atomic put)
-                # before the catalog row that references it exists
-                self.backend.put(key, data)
-                self.catalog.add_gop(
-                    pid, i, start, enc.num_frames, len(data), key,
-                    lru_seq=tick,
-                )
+            for enc, _data in chunks:
+                starts.append(start)
                 start += enc.num_frames
         else:
-            for i, (start, chunk) in enumerate(
-                _codec.split_into_gops(frames, "rgb")
-            ):
-                enc = _codec.encode_gop(chunk, "rgb")
-                key = f"{name}/{pid}/{i}.tvc"
-                data = _codec.serialize_gop(enc)
-                self.backend.put(key, data)
-                self.catalog.add_gop(
-                    pid, i, start, enc.num_frames, len(data), key,
-                    lru_seq=tick,
-                )
+            split = [
+                (start, _codec.encode_gop(chunk, "rgb"))
+                for start, chunk in _codec.split_into_gops(frames, "rgb")
+            ]
+            chunks = [(enc, _codec.serialize_gop(enc)) for _s, enc in split]
+            starts = [s0 for s0, _enc in split]
+        keys = [f"{name}/{pid}/{i}.tvc" for i in range(len(chunks))]
+        # publish-then-index, batch-wide: every object is durable (atomic
+        # puts, fanned out by sharded backends) before any catalog row
+        # that references it exists
+        self.backend.batch_put([
+            (key, data) for key, (_enc, data) in zip(keys, chunks)
+        ])
+        self.catalog.add_gops([
+            (pid, i, starts[i], chunks[i][0].num_frames,
+             len(chunks[i][1]), keys[i], tick)
+            for i in range(len(chunks))
+        ])
         return pid
 
     def _measure_step_mse(
@@ -735,28 +1016,41 @@ class VSS:
 
 
 class VSSWriter:
-    """Streaming, non-blocking writer: flushed GOPs are queryable."""
+    """Streaming, non-blocking writer: flushed GOPs are queryable.
 
-    def __init__(self, store: VSS, name: str, *, fps, codec, gop_frames,
-                 budget_bytes, t_start):
+    The logical video is registered at the FIRST flush — abandoning a
+    writer that never flushed leaves no catalog state at all (the
+    orphaned-logical bug the startup scavenger also cleans for older
+    stores).  With ``batch_gops`` > 1, encoded GOPs buffer and publish
+    through one ``backend.batch_put`` + one catalog transaction per
+    window; the publish-before-index order holds batch-wide."""
+
+    def __init__(self, store: VSS, spec: WriteSpec, *, batch_gops: int = 1):
         self.store = store
-        self.name = name
-        self.fps = fps
-        self.codec = codec
-        self.gop_frames = gop_frames
-        self.budget_bytes = budget_bytes
+        self.spec = spec
+        self.name = spec.name
+        self.fps = spec.fps
+        self.codec = spec.codec
+        self.gop_frames = spec.gop_frames
+        self.budget_bytes = spec.budget_bytes
+        self.batch_gops = max(1, int(batch_gops))
         self._buf: List[np.ndarray] = []
         self._buffered = 0
         self._next_frame = 0
         self._next_idx = 0
         self._pid: Optional[int] = None
         self._bytes_written = 0
-        self._t_start = t_start
+        self._t_start = spec.t_start
         self._closed = False
+        # encoded GOPs awaiting one batched publish: (key, data, nframes)
+        self._pending: List[Tuple[str, bytes, int]] = []
 
     def _ensure_physical(self, frame_shape) -> None:
         if self._pid is not None:
             return
+        # register the logical row only now that bytes are in flight —
+        # raises ValueError if another writer won the race for the name
+        self.store.catalog.create_logical(self.name, self.budget_bytes or 0)
         h, w, c = frame_shape
         roi = full_roi(w, h)
         self._pid = self.store.catalog.add_physical(
@@ -790,17 +1084,33 @@ class VSSWriter:
         enc = _codec.encode_gop(chunk, self.codec,
                                 use_pallas=self.store.use_pallas)
         key = f"{self.name}/{self._pid}/{self._next_idx}.tvc"
-        data = _codec.serialize_gop(enc)
-        # publish-then-index (crash safety: see repro.storage.recovery)
-        self.store.backend.put(key, data)
-        tick = self.store.catalog.lru_clock()
-        self.store.catalog.add_gop(
-            self._pid, self._next_idx, self._next_frame, chunk.shape[0],
-            len(data), key, lru_seq=tick,
+        self._pending.append(
+            (key, _codec.serialize_gop(enc), chunk.shape[0])
         )
         self._next_idx += 1
-        self._next_frame += chunk.shape[0]
-        self._bytes_written += len(data)
+        if len(self._pending) >= self.batch_gops:
+            self._publish_pending()
+
+    def _publish_pending(self) -> None:
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        # publish-then-index (crash safety: see repro.storage.recovery):
+        # the whole window is durable before any row references it
+        self.store.backend.batch_put([
+            (key, data) for key, data, _n in pending
+        ])
+        tick = self.store.catalog.lru_clock()
+        base_idx = self._next_idx - len(pending)
+        rows = []
+        start = self._next_frame
+        for j, (key, data, nframes) in enumerate(pending):
+            rows.append((self._pid, base_idx + j, start, nframes,
+                         len(data), key, tick))
+            start += nframes
+            self._bytes_written += len(data)
+        self.store.catalog.add_gops(rows)
+        self._next_frame = start
         # prefix becomes queryable immediately (§2 streaming writes)
         self.store.catalog.extend_physical_time(
             self._pid, self._t_start + self._next_frame / self.fps
@@ -811,7 +1121,12 @@ class VSSWriter:
             chunk = np.concatenate(self._buf, axis=0)
             self._flush_gop(chunk)
             self._buf, self._buffered = [], 0
+        self._publish_pending()
         self._closed = True
+        if self._pid is None:
+            raise ValueError(
+                f"writer for {self.name!r} closed with no frames appended"
+            )
         budget = self.budget_bytes or int(
             self.store.budget_multiple * max(self._bytes_written, 1)
         )

@@ -17,6 +17,13 @@ Contract notes
     eviction and joint-compression paths race deletes benignly).
   * ``batch_get`` preserves key order and is the backend's chance to
     overlap I/O (the §3 read plans touch many fragments per read).
+  * ``batch_put`` publishes many objects with per-object atomicity (no
+    cross-object transaction — callers index rows only after it
+    returns, so a crash mid-batch leaves orphans for the scavenger,
+    never dangling catalog rows).
+  * ``kind_for`` names the I/O performance class serving a key
+    ("memory", "localfs", "sharded", ...) so the §3 cost model can
+    price fragment fetches per tier (`CostModel.io_cost`).
   * ``list`` yields keys under a prefix; order is unspecified.
   * ``recover`` reconciles backend state against the SQLite catalog at
     startup (crash recovery); see `repro.storage.recovery`.
@@ -25,7 +32,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Iterable, List, Optional, Sequence
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 
 class ObjectNotFound(KeyError):
@@ -40,6 +47,9 @@ class ObjectStat:
 
 class StorageBackend(abc.ABC):
     """Abstract GOP object store: opaque bytes addressed by string keys."""
+
+    #: I/O performance class for `kind_for` / `CostModel.io_cost`
+    KIND = "default"
 
     @abc.abstractmethod
     def put(self, key: str, data: bytes) -> None:
@@ -66,6 +76,22 @@ class StorageBackend(abc.ABC):
         """Fetch many objects, preserving order. Backends that can
         overlap I/O (sharded volumes, remote stores) override this."""
         return [self.get(k) for k in keys]
+
+    def batch_put(self, items: Sequence[Tuple[str, bytes]]) -> None:
+        """Store many objects; each put keeps its atomicity, the batch
+        as a whole has none.  Backends that can overlap I/O (sharded
+        volumes, remote stores) override this to fan writes out the way
+        ``batch_get`` fans reads out."""
+        for key, data in items:
+            self.put(key, data)
+
+    def kind_for(self, key: str) -> str:
+        """The I/O performance class that would serve ``key`` right now
+        ("memory", "localfs", ...).  Tiered backends answer per key —
+        a hot-tier hit is priced as memory, a cold miss as the cold
+        backend — which is how `CostModel.io_cost` makes §3 plans
+        prefer fragments on faster tiers."""
+        return self.KIND
 
     def exists(self, key: str) -> bool:
         try:

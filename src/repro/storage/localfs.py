@@ -20,6 +20,8 @@ TEMP_MARKER = ".tmp-"
 
 
 class LocalFSBackend(StorageBackend):
+    KIND = "localfs"
+
     def __init__(self, root: str, *, fsync: bool = False):
         self.root = root
         self.fsync = fsync

@@ -8,6 +8,8 @@ from repro.storage.base import ObjectNotFound, ObjectStat, StorageBackend
 
 
 class MemoryBackend(StorageBackend):
+    KIND = "memory"
+
     def __init__(self):
         self._objects: Dict[str, bytes] = {}
         self._lock = threading.Lock()

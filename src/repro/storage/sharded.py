@@ -18,7 +18,7 @@ import bisect
 import hashlib
 import os
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Tuple
 
 from repro.storage.base import ObjectStat, StorageBackend
 from repro.storage.localfs import LocalFSBackend
@@ -31,6 +31,8 @@ def _hash64(s: str) -> int:
 
 
 class ShardedBackend(StorageBackend):
+    KIND = "sharded"
+
     def __init__(self, volumes: Sequence[StorageBackend]):
         if not volumes:
             raise ValueError("ShardedBackend needs at least one volume")
@@ -105,6 +107,26 @@ class ShardedBackend(StorageBackend):
         for f in futures:
             f.result()  # propagate ObjectNotFound etc.
         return results
+
+    def batch_put(self, items: Sequence[Tuple[str, bytes]]) -> None:
+        """Fan multi-GOP writes out over the volume pool, mirroring
+        ``batch_get``: one task per volume, writes within a volume stay
+        ordered (each `put` keeps its own atomicity)."""
+        by_vol: Dict[int, List[Tuple[str, bytes]]] = {}
+        for key, data in items:
+            by_vol.setdefault(self.volume_for(key), []).append((key, data))
+
+        def store(vol_idx: int, batch: List[Tuple[str, bytes]]):
+            vol = self.volumes[vol_idx]
+            for key, data in batch:
+                vol.put(key, data)
+
+        futures = [
+            self._pool.submit(store, vol_idx, batch)
+            for vol_idx, batch in by_vol.items()
+        ]
+        for f in futures:
+            f.result()  # propagate I/O errors
 
     def sweep_temps(self) -> int:
         return sum(v.sweep_temps() for v in self.volumes)

@@ -14,7 +14,7 @@ priority function the tier degrades to plain insertion-order LRU.
 from __future__ import annotations
 
 import threading
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.storage.base import ObjectNotFound, ObjectStat, StorageBackend
 
@@ -104,6 +104,11 @@ class TieredBackend(StorageBackend):
         self.cold.put(key, data)  # durable copy first (write-through)
         self._admit(key, bytes(data))
 
+    def batch_put(self, items: Sequence[Tuple[str, bytes]]) -> None:
+        self.cold.batch_put(items)  # durable copies first (write-through)
+        for key, data in items:
+            self._admit(key, bytes(data))
+
     def get(self, key: str) -> bytes:
         with self._lock:
             data = self._hot.get(key)
@@ -141,6 +146,16 @@ class TieredBackend(StorageBackend):
 
     def list(self, prefix: str = "") -> List[str]:
         return self.cold.list(prefix)  # cold is authoritative
+
+    def kind_for(self, key: str) -> str:
+        """Per-key tier answer: a hot hit is priced as memory I/O, a
+        miss as whatever the cold backend would charge — this is what
+        lets the §3 cost model prefer fragments already in the hot
+        tier over equal-cost fragments that would hit cold storage."""
+        with self._lock:
+            if key in self._hot:
+                return "memory"
+        return self.cold.kind_for(key)
 
     def sweep_temps(self) -> int:
         return self.cold.sweep_temps()

@@ -85,6 +85,19 @@ def test_batch_get_missing_raises(backend):
         backend.batch_get(["a", "missing"])
 
 
+def test_batch_put_roundtrip(backend):
+    items = [(f"v/1/{i}.tvc", f"payload-{i}".encode()) for i in range(20)]
+    backend.batch_put(items)
+    assert backend.batch_get([k for k, _ in items]) == [d for _, d in items]
+    backend.batch_put([("v/1/0.tvc", b"overwritten")])  # overwrite allowed
+    assert backend.get("v/1/0.tvc") == b"overwritten"
+
+
+def test_batch_put_empty_noop(backend):
+    backend.batch_put([])
+    assert backend.list() == []
+
+
 def test_list_prefix(backend):
     backend.put("v/1/0.tvc", b"x")
     backend.put("v/2/0.tvc", b"y")
@@ -133,6 +146,25 @@ def test_sharded_batch_get_fans_out(tmp_path):
         b.put(k, bytes([i]))
     assert b.batch_get(keys) == [bytes([i]) for i in range(50)]
     b.close()
+
+
+def test_sharded_batch_put_places_like_put(tmp_path):
+    b = ShardedBackend.local(str(tmp_path), 4)
+    items = [(f"v/{i}/0.tvc", f"data-{i}".encode()) for i in range(40)]
+    b.batch_put(items)
+    for k, d in items:
+        # fan-out must respect the hash ring: the owning volume holds it
+        assert b.volumes[b.volume_for(k)].get(k) == d
+    assert all(len(v.list()) > 0 for v in b.volumes)
+    b.close()
+
+
+def test_tiered_batch_put_write_through(tmp_path):
+    cold = LocalFSBackend(str(tmp_path))
+    b = TieredBackend(cold, hot_bytes=1 << 20)
+    b.batch_put([("a", b"1"), ("b", b"2")])
+    assert cold.get("a") == b"1" and cold.get("b") == b"2"  # durable copies
+    assert set(b.hot_keys()) == {"a", "b"}  # and hot-admitted
 
 
 def test_tiered_write_through_and_spill(tmp_path):
