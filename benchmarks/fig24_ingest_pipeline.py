@@ -1,0 +1,195 @@
+"""Fig. 24 (beyond-paper) — pipelined vs blocking ingest.
+
+The paper's write-path argument (§4, §6.5) is that ingest keeps up with
+live cameras only when encoding overlaps physical I/O.  The workload
+models exactly that: one camera, then N cameras, appending frames while
+every GOP must become durable.  The *blocking* path (the seed
+behaviour, ``pipelined=False``) encodes a window and then waits for its
+``backend.batch_put`` before touching the next chunk; the *pipelined*
+path hands windows to the store's shared `IngestPipeline`, whose
+workers issue the batched puts and windowed catalog commits while the
+ingest thread keeps encoding.
+
+Each put pays a fixed ``DEVICE_LATENCY_S`` on top of the real LocalFS /
+Sharded write — the §6.5 setting where a GOP object must become durable
+on a device with non-trivial commit latency (spinning disk fsync,
+network volume round-trip).  A constant models it because raw fsync
+latency on shared CI machines swings between microseconds (pure page
+cache) and hundreds of milliseconds depending on neighbours, which
+would make the speedup claim a coin flip; the architecture claim —
+encode overlaps publish I/O — is what this figure checks, and the
+sleeping put releases the GIL exactly like the real syscall it stands
+in for.
+
+Claim checked: pipelined ingest is ≥ 1.3× blocking ingest (frames/sec)
+on at least one backend/workload combination.
+
+    PYTHONPATH=src python -m benchmarks.fig24_ingest_pipeline [--quick]
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+from benchmarks.common import Row, road, timer
+from repro.core.spec import WriteSpec
+from repro.core.store import VSS
+from repro.storage import LocalFSBackend, ShardedBackend, StorageBackend
+
+DEVICE_LATENCY_S = 0.1  # per-object durable-commit latency (see above)
+
+
+class SlowDevice(StorageBackend):
+    """A real backend whose puts pay a fixed durable-commit latency."""
+
+    def __init__(self, inner: StorageBackend, latency_s: float):
+        self.inner = inner
+        self.latency_s = latency_s
+        self.KIND = inner.KIND
+
+    def put(self, key, data):
+        self.inner.put(key, data)
+        time.sleep(self.latency_s)
+
+    def get(self, key):
+        return self.inner.get(key)
+
+    def delete(self, key):
+        self.inner.delete(key)
+
+    def stat(self, key):
+        return self.inner.stat(key)
+
+    def list(self, prefix=""):
+        return self.inner.list(prefix)
+
+    def sweep_temps(self):
+        return self.inner.sweep_temps()
+
+    def layout_fingerprint(self):
+        return self.inner.layout_fingerprint()
+
+    def close(self):
+        self.inner.close()
+
+
+def _slow_sharded(root: str, n: int) -> ShardedBackend:
+    # wrap each volume so the shard pool's fan-out still overlaps the
+    # per-volume commit latency, exactly as it would on real devices
+    sh = ShardedBackend.local(root, n)
+    sh.volumes = [SlowDevice(v, DEVICE_LATENCY_S) for v in sh.volumes]
+    return sh
+
+
+BACKENDS = (
+    ("localfs", lambda root: SlowDevice(LocalFSBackend(root),
+                                        DEVICE_LATENCY_S)),
+    ("sharded4", lambda root: _slow_sharded(root, 4)),
+)
+
+CODEC = "tvc-hi"
+GOP_FRAMES = 15
+BATCH_GOPS = 2
+CHUNK = 30
+WORKERS = 4
+TRIALS = 2  # best-of, interleaved: encode throughput on shared CI
+#             machines is noisy; the claim is about overlap capability
+
+
+def _ingest(vss: VSS, frames, n_streams: int, *, pipelined: bool) -> float:
+    """Round-robin ``CHUNK``-frame appends across ``n_streams`` writers
+    (one per camera) on ONE ingest thread — the fair comparison: both
+    modes spend identical encode CPU on this thread, the pipelined mode
+    alone overlaps it with the publish I/O."""
+    writers = [
+        vss.writer_spec(
+            WriteSpec(name=f"cam{i}", fps=30.0, codec=CODEC,
+                      gop_frames=GOP_FRAMES),
+            batch_gops=BATCH_GOPS, pipelined=pipelined,
+        )
+        for i in range(n_streams)
+    ]
+    with timer() as t:
+        for off in range(0, frames.shape[0], CHUNK):
+            chunk = frames[off: off + CHUNK]
+            for w in writers:
+                w.append(chunk)
+        for w in writers:
+            w.close()  # durability barrier in both modes
+    return t[0]
+
+
+def run(scale: float = 1.0) -> list:
+    frames = road(max(int(120 * scale), 60))
+    n_streams = 8 if scale >= 1.0 else 4
+    rows = []
+    from repro import codec as _codec
+
+    _codec.encode_gop(frames[:GOP_FRAMES], CODEC)  # warm compile caches
+
+    for name, make in BACKENDS:
+        for streams in (1, n_streams):
+            perf: dict = {}
+            notes: dict = {}
+            for _trial in range(TRIALS):  # interleave modes across trials
+                for mode in ("blocking", "pipelined"):
+                    root = tempfile.mkdtemp(prefix=f"vssbench24_{name}_")
+                    vss = VSS(
+                        root, backend=make(root + "/objects"),
+                        enable_deferred=False, enable_compaction=False,
+                        ingest_workers=WORKERS,
+                    )
+                    try:
+                        secs = _ingest(vss, frames, streams,
+                                       pipelined=mode == "pipelined")
+                        fps = streams * frames.shape[0] / secs
+                        note = (f"{streams} stream(s), {CODEC},"
+                                f" {DEVICE_LATENCY_S * 1e3:.0f}ms/put device")
+                        if mode == "pipelined":
+                            st = vss.ingest.stats()
+                            note += (
+                                f", queue hwm {st.max_queued_gops} GOPs,"
+                                f" {st.backpressure_waits} stalls"
+                            )
+                        if fps > perf.get(mode, 0.0):
+                            perf[mode] = fps
+                            notes[mode] = note
+                    finally:
+                        vss.close()
+                        shutil.rmtree(root, ignore_errors=True)
+            for mode in ("blocking", "pipelined"):
+                rows.append(Row(
+                    "fig24", f"{name}_{streams}s_{mode}",
+                    perf[mode], "frames/s", notes[mode],
+                ))
+            rows.append(Row(
+                "fig24", f"{name}_{streams}s_speedup",
+                perf["pipelined"] / perf["blocking"], "x",
+                "pipelined / blocking (want >= 1.3 somewhere)",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller clip, 4 streams, same claim")
+    ap.add_argument("--scale", type=float, default=None)
+    args = ap.parse_args()
+    scale = args.scale if args.scale is not None else (
+        0.5 if args.quick else 1.0
+    )
+    print("bench,name,value,unit,notes")
+    best = 0.0
+    for row in run(scale):
+        print(row.csv())
+        if row.name.endswith("_speedup"):
+            best = max(best, row.value)
+    if best < 1.3:
+        raise SystemExit(
+            f"fig24: best pipelined speedup {best:.2f}x is below the"
+            " 1.3x claim on every backend"
+        )

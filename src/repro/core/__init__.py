@@ -1,4 +1,9 @@
 """The paper's primary contribution: the VSS storage manager."""
+from repro.core.ingest import (  # noqa: F401
+    IngestPipeline,
+    IngestStats,
+    PublishWindow,
+)
 from repro.core.spec import ReadSpec, ResolvedRead, WriteSpec  # noqa: F401
 from repro.core.store import VSS, ReadResult, VSSWriter, resample  # noqa: F401
 from repro.core.types import (  # noqa: F401

@@ -172,20 +172,29 @@ class Catalog:
         return paths
 
     def drop_empty_logicals(self) -> List[str]:
-        """Remove logical rows with no physical videos at all — the turd a
-        crashed (or abandoned) `VSSWriter` used to leave between logical
-        registration and its first flush.  Registration is now deferred to
-        the first flush, so surviving empty rows can only come from older
-        stores or a crash inside the first flush; the startup scavenger
-        calls this to clean both.  Logicals whose pages were evicted keep
-        their original physical row and are never touched here."""
+        """Remove logical videos that index no data at all: rows with no
+        physical videos (a crash between logical registration and the
+        first flush in older stores) and logicals none of whose physicals
+        holds a single GOP row (a crash — or a killed ingest pipeline —
+        before the first publish window landed: the physical row was
+        registered synchronously but every window was still queued, so
+        nothing was ever indexed).  The startup scavenger calls this
+        after the object-level scavenge.  Logicals whose pages were
+        partially evicted are never touched here — budget eviction
+        always preserves a lossless cover, so a live video always keeps
+        at least one GOP row."""
         with self._lock:
             rows = self._conn.execute(
-                "SELECT name FROM logical WHERE name NOT IN"
-                " (SELECT DISTINCT logical FROM physical)"
+                "SELECT name FROM logical WHERE name NOT IN ("
+                " SELECT DISTINCT p.logical FROM physical p"
+                " JOIN gop g ON g.physical_id = p.id)"
             ).fetchall()
             names = [r[0] for r in rows]
             if names:
+                self._conn.executemany(
+                    "DELETE FROM physical WHERE logical=?",
+                    [(n,) for n in names],
+                )
                 self._conn.executemany(
                     "DELETE FROM logical WHERE name=?",
                     [(n,) for n in names],
@@ -302,14 +311,28 @@ class Catalog:
     def add_gops(
         self,
         rows: Sequence[Tuple[int, int, int, int, int, str, int]],
+        *,
+        return_ids: bool = True,
     ) -> List[int]:
         """Batch-insert GOP rows — one transaction, one commit — for the
         batched admission/ingest paths (`backend.batch_put` publishes the
         objects first; these rows index them afterwards).  Each row is
         (physical_id, index, start_frame, num_frames, nbytes, path,
-        lru_seq); returns the new GOP ids in order."""
-        ids: List[int] = []
+        lru_seq); returns the new GOP ids in order.  The ingest
+        pipeline's publish windows pass ``return_ids=False`` to take the
+        ``executemany`` fast path (one prepared statement for the whole
+        window, no per-row id round-trip)."""
         with self._lock:
+            if not return_ids:
+                self._conn.executemany(
+                    "INSERT INTO gop(physical_id, idx, start_frame,"
+                    " num_frames, nbytes, path, lru_seq)"
+                    " VALUES (?,?,?,?,?,?,?)",
+                    list(rows),
+                )
+                self._conn.commit()
+                return []
+            ids: List[int] = []
             for (pid, idx, start, nframes, nbytes, path, lru_seq) in rows:
                 cur = self._conn.execute(
                     "INSERT INTO gop(physical_id, idx, start_frame,"

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import time
 from pathlib import Path
 from typing import Dict, Optional, Tuple
@@ -40,6 +41,17 @@ import numpy as np
 from repro.codec import canonical_codec
 
 ETA = 1.45  # dependent-frame decode premium
+
+# Install-time calibration lands next to the store's catalog: a single
+# JSON file holding the α table and the measured io_table together.
+# `VSS` loads it at startup when present (`calibration_path`), falling
+# back to the shipped defaults (`_default_table` + DEFAULT_IO_TABLE).
+COST_MODEL_FILENAME = "cost_model.json"
+
+
+def calibration_path(root: str) -> str:
+    """Where a store rooted at ``root`` keeps its calibrated cost model."""
+    return str(Path(root) / COST_MODEL_FILENAME)
 
 # Default α table: per-pixel relative cost, keyed (codec_in, codec_out),
 # each entry a list of (pixels_per_frame, cost_per_pixel) calibration
@@ -114,10 +126,16 @@ class CostModel:
         return cls(obj)  # legacy alpha-only table
 
     def save(self, path: str) -> None:
-        Path(path).write_text(json.dumps({
+        """Atomic publish (temp + ``os.replace``), matching the storage
+        layer's discipline: a crash mid-save must never leave a torn
+        table where the next startup expects a readable one."""
+        p = Path(path)
+        tmp = p.with_name(p.name + f".tmp-{os.getpid()}")
+        tmp.write_text(json.dumps({
             "alpha": self.table,
             "io": {k: list(v) for k, v in self.io_table.items()},
         }))
+        os.replace(tmp, p)
 
     def alpha(
         self, codec_in: str, codec_out: str, pixels_per_frame: int

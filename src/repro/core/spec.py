@@ -95,6 +95,11 @@ class ReadSpec:
     quality_eps_db: float = DEFAULT_QUALITY_EPS_DB
     cache: bool = True
     method: Optional[str] = None  # solver override; None = store default
+    # QoS hint: within one video's plan group, ``read_batch`` executes
+    # higher-priority specs first (ties keep submission order).  It does
+    # not change *what* is planned or returned — only the order work is
+    # materialized in, so urgent requests see their results earliest.
+    priority: int = 0
 
     def __post_init__(self):
         if not self.name or not isinstance(self.name, str):
@@ -122,6 +127,13 @@ class ReadSpec:
                 f"unknown solver method {self.method!r}"
                 f" (expected one of {SOLVER_METHODS[1:]})"
             )
+        try:
+            priority = int(self.priority)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"priority must be an integer, got {self.priority!r}"
+            ) from None
+        object.__setattr__(self, "priority", priority)
 
     # -- catalog-relative resolution ------------------------------------
     def resolve(self, original: PhysicalMeta) -> "ResolvedRead":

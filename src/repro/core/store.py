@@ -24,7 +24,14 @@ whose flushed GOPs become immediately queryable (prefix reads of a
 video still being written are supported); visibility of the *final*
 GOP is only guaranteed after ``close()``, matching the paper's caveat.
 The logical-video row is registered at the FIRST flush, not at handle
-creation, so an abandoned writer leaves nothing behind.
+creation, so an abandoned writer leaves nothing behind.  Ingest is
+pipelined (§4, §6.5, `repro.core.ingest`): writers encode on their own
+thread and hand publish windows to the store's shared bounded queue,
+whose workers issue the batched puts and windowed catalog commits —
+encoding overlaps physical I/O within one stream and across N camera
+streams.  ``close()`` stays a durability barrier, reads wait out the
+queue for the videos they touch, and a failed put re-raises on the
+owning writer's next call.
 
 GOP payload bytes never touch the filesystem here: every object moves
 through a `repro.storage.StorageBackend` (``backend=`` parameter, spec
@@ -36,7 +43,9 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -46,9 +55,10 @@ import numpy as np
 from repro import codec as _codec
 from repro import storage as _storage
 from repro.core import compact as _compact
+from repro.core import ingest as _ingest
 from repro.core.cache import CacheManager, CachePolicy
 from repro.core.catalog import Catalog
-from repro.core.cost import ETA, CostModel
+from repro.core.cost import ETA, CostModel, calibration_path
 from repro.core.deferred import DeferredCompressor, is_wrapped, unwrap_bytes
 from repro.core.quality import QualityEstimator, exact_mse
 from repro.core.select import (
@@ -207,6 +217,9 @@ class VSS:
         enable_deferred: bool = True,
         enable_compaction: bool = True,
         use_pallas: Optional[bool] = None,
+        pipelined_ingest: bool = True,
+        ingest_workers: int = _ingest.DEFAULT_WORKERS,
+        ingest_queue_gops: int = _ingest.DEFAULT_QUEUE_GOPS,
     ):
         self.root = root
         os.makedirs(root, exist_ok=True)
@@ -251,6 +264,22 @@ class VSS:
         self.catalog.set_meta("clean_shutdown", "0")
         self.budget_multiple = budget_multiple
         self.solver = solver
+        if cost_model is None:
+            # install-time calibration (α table + measured io_table)
+            # persists next to the catalog; load it when present,
+            # falling back to the shipped defaults (DEFAULT_IO_TABLE).
+            # An unreadable table must never block the store — cost
+            # models tune plans, they don't gate data.
+            cal = calibration_path(root)
+            if os.path.exists(cal):
+                try:
+                    cost_model = CostModel.load(cal)
+                except (ValueError, KeyError, TypeError, OSError) as exc:
+                    warnings.warn(
+                        f"ignoring unreadable cost calibration {cal!r}"
+                        f" ({exc}); using default tables — re-run"
+                        " calibrate_io() to replace it"
+                    )
         self.cost_model = cost_model or CostModel.default()
         self.policy = cache_policy or CachePolicy()
         self.cache = CacheManager(self.catalog, self.policy,
@@ -261,24 +290,58 @@ class VSS:
         self.enable_deferred = enable_deferred
         self.enable_compaction = enable_compaction
         self.use_pallas = use_pallas
+        # shared per-store ingest pipeline (§4 write path): created
+        # lazily so read-only stores never spawn worker threads
+        self.pipelined_ingest = pipelined_ingest
+        self.ingest_workers = ingest_workers
+        self.ingest_queue_gops = ingest_queue_gops
+        self._ingest: Optional[_ingest.IngestPipeline] = None
+        self._ingest_init = threading.Lock()
+
+    @property
+    def ingest(self) -> _ingest.IngestPipeline:
+        """The store's shared `IngestPipeline` — every pipelined writer
+        (one per camera stream) submits publish windows here, so N
+        concurrent streams interleave their batched puts through one
+        bounded queue and worker pool."""
+        if self._ingest is None:
+            with self._ingest_init:
+                if self._ingest is None:
+                    self._ingest = _ingest.IngestPipeline(
+                        self.backend, self.catalog,
+                        workers=self.ingest_workers,
+                        queue_gops=self.ingest_queue_gops,
+                    )
+        return self._ingest
 
     # ------------------------------------------------------------------
     # write path
     # ------------------------------------------------------------------
     def writer_spec(
-        self, spec: WriteSpec, *, batch_gops: int = 1
+        self, spec: WriteSpec, *, batch_gops: int = 1,
+        pipelined: Optional[bool] = None,
     ) -> "VSSWriter":
         """Open a streaming writer for ``spec``.  ``batch_gops`` > 1
         buffers encoded GOPs and publishes them through one
         ``backend.batch_put`` per window (amortized I/O + one catalog
-        transaction) at the cost of prefix-visibility granularity."""
+        transaction) at the cost of prefix-visibility granularity.
+
+        ``pipelined`` (default: the store's ``pipelined_ingest``) hands
+        publish windows to the shared `IngestPipeline` so encoding and
+        physical I/O overlap — the writer thread keeps encoding while
+        workers drain the bounded queue.  ``close()`` remains a
+        durability barrier either way, and a failed put re-raises on
+        this writer's next ``append``/``close``; ``pipelined=False``
+        publishes synchronously on the appending thread (the pre-
+        pipeline behaviour, kept for baselines and debugging)."""
         if not isinstance(spec, WriteSpec):
             raise TypeError(f"writer_spec takes a WriteSpec, got {spec!r}")
         if self.catalog.logical_exists(spec.name):
             raise ValueError(
                 f"{spec.name!r} already exists (no-overwrite policy)"
             )
-        return VSSWriter(self, spec, batch_gops=batch_gops)
+        return VSSWriter(self, spec, batch_gops=batch_gops,
+                         pipelined=pipelined)
 
     def write_spec(self, spec: WriteSpec, frames: np.ndarray) -> PhysicalMeta:
         """Bulk write: all of ``frames`` under one spec (GOP publishes
@@ -361,6 +424,11 @@ class VSS:
                 raise TypeError(f"read_batch takes ReadSpecs, got {sp!r}")
         if not specs:
             return []
+        # read-your-writes: wait out any publish windows still queued in
+        # the ingest pipeline for the videos this batch touches, so
+        # mid-stream prefix reads observe everything already appended
+        if self._ingest is not None:
+            self._ingest.barrier({sp.name for sp in specs})
         self.deferred.mark_busy()
         try:
             return self._read_batch(specs)
@@ -402,10 +470,23 @@ class VSS:
         else:
             ios[resolved[0].name] = None
 
-        # -- execute: duplicates share one materialization -----------------
+        # -- execute: duplicates share one materialization.  Within each
+        # video group, higher-priority specs materialize first (QoS
+        # hint: urgent requests see their results earliest); results
+        # stay order-preserving regardless.
+        first_pos: Dict[str, int] = {}
+        for i, r in enumerate(resolved):
+            first_pos.setdefault(r.name, i)
+        exec_order = sorted(
+            range(len(specs)),
+            key=lambda i: (
+                first_pos[resolved[i].name], -specs[i].priority, i
+            ),
+        )
         done: Dict[tuple, Tuple[Optional[np.ndarray], Optional[list]]] = {}
         results: List[Optional[ReadResult]] = [None] * len(specs)
-        for i, r in enumerate(resolved):
+        for i in exec_order:
+            r = resolved[i]
             plan, io = plans[i], ios[r.name]
             rkey = r.result_key()
             if rkey in done:
@@ -993,6 +1074,8 @@ class VSS:
     # misc
     # ------------------------------------------------------------------
     def stats(self, name: str) -> Dict:
+        if self._ingest is not None:  # count fully-indexed state only
+            self._ingest.barrier({name})
         physicals = self.catalog.physicals_for(name)
         return {
             "physical_videos": len(physicals),
@@ -1005,10 +1088,40 @@ class VSS:
 
     def drop(self, name: str) -> None:
         """Delete a logical video: catalog rows and backend objects."""
+        if self._ingest is not None:  # don't race in-flight publishes
+            self._ingest.barrier({name})
         for key in self.catalog.drop_logical(name):
             self.backend.delete(key)
 
+    def calibrate_io(
+        self, backends: Optional[Dict[str, _storage.StorageBackend]] = None,
+        *, save: bool = True, **kw,
+    ) -> Dict[str, Tuple[float, float]]:
+        """Measure I/O profiles on this store's actual backend (the
+        install-time fig22 step) and fold them into the live cost
+        model.  With ``save`` (default), the whole model — α table plus
+        the measured io_table — persists to ``calibration_path(root)``,
+        which `VSS` loads on every later startup; stores without the
+        file keep using `DEFAULT_IO_TABLE`.  ``backends`` maps extra
+        {kind: backend} pairs to measure (e.g. a candidate remote
+        store); the store's own backend is measured under its KIND."""
+        from repro.core import cost as _cost
+
+        if backends is None:
+            backends = {}
+        backends.setdefault(self.backend.KIND, self.backend)
+        table = _cost.calibrate_io(backends, **kw)
+        self.cost_model.io_table.update(table)
+        if save:
+            self.cost_model.save(calibration_path(self.root))
+        return table
+
     def close(self):
+        if self._ingest is not None:
+            # land every queued publish window, then stop the workers —
+            # close() is a store-wide durability barrier
+            self._ingest.drain()
+            self._ingest.close()
         self.deferred.stop_background()
         self.catalog.set_meta("clean_shutdown", "1")
         self.catalog.close()
@@ -1023,9 +1136,20 @@ class VSSWriter:
     orphaned-logical bug the startup scavenger also cleans for older
     stores).  With ``batch_gops`` > 1, encoded GOPs buffer and publish
     through one ``backend.batch_put`` + one catalog transaction per
-    window; the publish-before-index order holds batch-wide."""
+    window; the publish-before-index order holds batch-wide.
 
-    def __init__(self, store: VSS, spec: WriteSpec, *, batch_gops: int = 1):
+    Pipelined mode (the default) submits each publish window to the
+    store's shared `IngestPipeline` instead of blocking on the put:
+    encoding continues on this thread while workers drain the queue,
+    and N writers (one per camera) interleave their windows through the
+    same pool.  ``close()`` is still a durability barrier — it returns
+    only after every window is durable and indexed — and a failed put
+    re-raises here on the next ``append``/``close``, never silently
+    dropping a GOP.  Mid-stream reads stay correct because the store
+    waits out this video's queued windows before planning."""
+
+    def __init__(self, store: VSS, spec: WriteSpec, *, batch_gops: int = 1,
+                 pipelined: Optional[bool] = None):
         self.store = store
         self.spec = spec
         self.name = spec.name
@@ -1034,6 +1158,9 @@ class VSSWriter:
         self.gop_frames = spec.gop_frames
         self.budget_bytes = spec.budget_bytes
         self.batch_gops = max(1, int(batch_gops))
+        if pipelined is None:
+            pipelined = store.pipelined_ingest
+        self._channel = store.ingest.channel(spec.name) if pipelined else None
         self._buf: List[np.ndarray] = []
         self._buffered = 0
         self._next_frame = 0
@@ -1066,7 +1193,17 @@ class VSSWriter:
                 else _codec.gop.DEFAULT_COMPRESSED_GOP_FRAMES
             )
 
+    def _check_pipeline_error(self) -> None:
+        """Exact error propagation: a window that failed in a worker
+        re-raises on the owning writer's next call.  The writer is
+        poisoned — its queued windows were discarded by the pipeline
+        (indexing past the failure would fake a durable prefix)."""
+        if self._channel is not None and self._channel.error is not None:
+            self._closed = True
+            raise self._channel.error
+
     def append(self, frames: np.ndarray) -> None:
+        self._check_pipeline_error()
         if self._closed:
             raise RuntimeError("writer closed")
         frames = np.asarray(frames, np.uint8)
@@ -1075,10 +1212,13 @@ class VSSWriter:
         self._buffered += frames.shape[0]
         while self._buffered >= self.gop_frames:
             chunk = np.concatenate(self._buf, axis=0)
-            self._flush_gop(chunk[: self.gop_frames])
+            # consume the buffer BEFORE flushing: if the flush's publish
+            # fails, the frames live in _pending (buffered back for the
+            # retry) — leaving them here too would re-encode them twice
             rest = chunk[self.gop_frames :]
             self._buf = [rest] if rest.shape[0] else []
             self._buffered = rest.shape[0]
+            self._flush_gop(chunk[: self.gop_frames])
 
     def _flush_gop(self, chunk: np.ndarray) -> None:
         enc = _codec.encode_gop(chunk, self.codec,
@@ -1092,36 +1232,59 @@ class VSSWriter:
             self._publish_pending()
 
     def _publish_pending(self) -> None:
+        """Turn the buffered GOPs into one `PublishWindow` and hand it
+        off — to the shared pipeline (non-blocking; backpressure when
+        the queue is full) or, for blocking writers, executed inline.
+        Both paths run the identical publish-then-index protocol (crash
+        safety: see repro.storage.recovery): the whole window is
+        durable before any row references it, rows index in one
+        windowed catalog transaction, and only then does the prefix
+        horizon advance (§2 streaming writes)."""
         if not self._pending:
             return
         pending, self._pending = self._pending, []
-        # publish-then-index (crash safety: see repro.storage.recovery):
-        # the whole window is durable before any row references it
-        self.store.backend.batch_put([
-            (key, data) for key, data, _n in pending
-        ])
-        tick = self.store.catalog.lru_clock()
         base_idx = self._next_idx - len(pending)
         rows = []
         start = self._next_frame
         for j, (key, data, nframes) in enumerate(pending):
             rows.append((self._pid, base_idx + j, start, nframes,
-                         len(data), key, tick))
+                         len(data), key))
             start += nframes
-            self._bytes_written += len(data)
-        self.store.catalog.add_gops(rows)
-        self._next_frame = start
-        # prefix becomes queryable immediately (§2 streaming writes)
-        self.store.catalog.extend_physical_time(
-            self._pid, self._t_start + self._next_frame / self.fps
+        window = _ingest.PublishWindow(
+            pid=self._pid,
+            items=[(key, data) for key, data, _n in pending],
+            rows=rows,
+            t_end=self._t_start + start / self.fps,
         )
+        try:
+            if self._channel is None:
+                _ingest.publish_window(
+                    self.store.backend, self.store.catalog, window
+                )
+            else:
+                self.store.ingest.submit(self._channel, window)
+        except BaseException:
+            # nothing from this window was handed off (an inline publish
+            # failed before indexing; a rejected submit never queued):
+            # restore the buffer so the writer's frame accounting still
+            # matches the catalog and a retrying caller republishes the
+            # identical window instead of indexing past a phantom hole
+            self._pending = pending + self._pending
+            raise
+        self._next_frame = start
+        self._bytes_written += window.nbytes
 
     def close(self) -> PhysicalMeta:
+        self._check_pipeline_error()
         if self._buffered:
             chunk = np.concatenate(self._buf, axis=0)
             self._flush_gop(chunk)
             self._buf, self._buffered = [], 0
         self._publish_pending()
+        if self._channel is not None:
+            # durability barrier: every window durable AND indexed (or
+            # the failure re-raises) before close() returns
+            self.store.ingest.flush(self._channel)
         self._closed = True
         if self._pid is None:
             raise ValueError(

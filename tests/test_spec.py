@@ -1,9 +1,11 @@
 """Declarative ReadSpec/WriteSpec API, joint batch planning, writer
 lifecycle, and the backend-aware I/O cost term."""
+import os
+
 import numpy as np
 import pytest
 
-from repro.core.cost import CostModel
+from repro.core.cost import DEFAULT_IO_TABLE, CostModel, calibration_path
 from repro.core.spec import ReadSpec, WriteSpec
 from repro.core.store import VSS
 from repro.storage import (
@@ -304,6 +306,115 @@ def test_read_batch_fewer_fetches_than_sequential(tmp_path, clip):
         assert batch_fetched <= 12  # 60 frames / 5-frame GOPs
         for got, want in zip(batch, seq_frames):
             assert np.array_equal(got.frames, want)
+    finally:
+        vss.close()
+
+
+# ---------------------------------------------------------------------------
+# priority hints (QoS)
+# ---------------------------------------------------------------------------
+
+def test_priority_validated_and_canonicalized():
+    assert ReadSpec(name="v").priority == 0
+    assert ReadSpec(name="v", priority=7).priority == 7
+    assert ReadSpec(name="v", priority=-2).priority == -2
+    assert ReadSpec(name="v", priority="3").priority == 3  # canonicalized
+    with pytest.raises(ValueError):
+        ReadSpec(name="v", priority="urgent")
+    with pytest.raises(ValueError):
+        ReadSpec(name="v", priority=None)
+
+
+def test_priority_does_not_split_plan_groups(vss, clip):
+    """Priority is an execution hint, not part of the view identity:
+    same-view specs still share one joint problem."""
+    vss.write("v", clip, fps=30.0, codec="tvc-hi", gop_frames=15)
+    out = vss.read_batch([
+        ReadSpec(name="v", t=(0.0, 1.5), cache=False, priority=0),
+        ReadSpec(name="v", t=(0.5, 2.0), cache=False, priority=9),
+    ])
+    demands = [d for r in out for d in (r.plan.problem.demands or [])]
+    assert demands and max(demands) == 2  # still jointly planned
+
+
+def test_read_batch_executes_by_priority_within_group(vss, clip,
+                                                      monkeypatch):
+    vss.write("v", clip, fps=30.0, codec="tvc-hi", gop_frames=15)
+    order = []
+    orig = VSS._execute
+
+    def spy(self, plan, roi, resolution, out_fps, io=None):
+        order.append((plan.segments[0][0], plan.segments[-1][1]))
+        return orig(self, plan, roi, resolution, out_fps, io)
+
+    monkeypatch.setattr(VSS, "_execute", spy)
+    specs = [
+        ReadSpec(name="v", t=(0.0, 0.5), cache=False, priority=0),
+        ReadSpec(name="v", t=(0.5, 1.0), cache=False, priority=5),
+        ReadSpec(name="v", t=(1.0, 1.5), cache=False, priority=2),
+        ReadSpec(name="v", t=(1.5, 2.0), cache=False, priority=5),
+    ]
+    out = vss.read_batch(specs)
+    # execution: priority 5 specs first (submission order breaks the
+    # tie), then 2, then 0
+    want = [(0.5, 1.0), (1.5, 2.0), (1.0, 1.5), (0.0, 0.5)]
+    got_order = list(order)
+    assert len(got_order) == len(want)
+    for (ga, gb), (wa, wb) in zip(got_order, want):
+        assert ga == pytest.approx(wa) and gb == pytest.approx(wb)
+    # results stay order-preserving regardless of execution order
+    seq = [vss.read_spec(sp).frames for sp in specs]
+    for got, ref in zip(out, seq):
+        assert np.array_equal(got.frames, ref)
+
+
+# ---------------------------------------------------------------------------
+# install-time calibration persistence
+# ---------------------------------------------------------------------------
+
+def test_calibrate_io_persists_and_loads_at_startup(tmp_path):
+    root = str(tmp_path / "vss")
+    vss = VSS(root, backend="memory")
+    table = vss.calibrate_io(
+        trials=1, small_bytes=1 << 10, large_bytes=1 << 16,
+        reference_pixels_per_s=1e9,
+    )
+    assert "memory" in table
+    assert os.path.exists(calibration_path(root))
+    assert not vss.backend.list("_calib/")  # probe objects cleaned up
+    saved = tuple(vss.cost_model.io_table["memory"])
+    vss.close()
+
+    vss2 = VSS(root, backend="memory")  # startup loads the saved model
+    try:
+        assert tuple(vss2.cost_model.io_table["memory"]) == \
+            pytest.approx(saved)
+        # kinds that were never measured fall back to the shipped table
+        assert tuple(vss2.cost_model.io_table["remote"]) == \
+            DEFAULT_IO_TABLE["remote"]
+    finally:
+        vss2.close()
+
+
+def test_store_without_calibration_uses_defaults(tmp_path):
+    vss = VSS(str(tmp_path / "vss"))
+    try:
+        assert vss.cost_model.io_table == DEFAULT_IO_TABLE
+    finally:
+        vss.close()
+
+
+def test_torn_calibration_file_never_blocks_startup(tmp_path):
+    """A crash mid-save (or hand-editing gone wrong) must not brick the
+    store: an unreadable table warns and falls back to defaults."""
+    root = str(tmp_path / "vss")
+    os.makedirs(root, exist_ok=True)
+    with open(calibration_path(root), "w") as f:
+        f.write('{"alpha": {"rgb->rgb": [[100, ')  # torn JSON
+    with pytest.warns(UserWarning, match="unreadable cost calibration"):
+        vss = VSS(root)
+    try:
+        assert vss.cost_model.io_table == DEFAULT_IO_TABLE
     finally:
         vss.close()
 
