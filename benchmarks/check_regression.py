@@ -1,0 +1,145 @@
+"""Gate a benchmark sweep against the committed baseline.
+
+    python benchmarks/check_regression.py \
+        --baseline benchmarks/baseline.json --result BENCH_nightly.json
+
+The baseline pins {bench/name: {value, unit}} from a reference run
+(``--update-baseline`` regenerates it from a result JSON).  A metric
+regresses when it is worse than baseline x tolerance — "worse" is
+direction-aware, inferred from the unit: time-like units (``s``,
+``s/read``) must not grow, rate-like units (``MiB/s``, ``frames/s``,
+``x`` speedups) must not shrink.  Count-like units (``objects``,
+``reads``) are informational and never gate.
+
+Tolerance is deliberately loose (default 2.5x): shared CI runners are
+noisy and the baseline may have been recorded on different hardware —
+this gate catches algorithmic cliffs (a 10x plan-time blowup, a fanout
+that stopped overlapping), not 10% jitter.  Per-entry ``tolerance``
+overrides in the baseline tighten or loosen individual metrics.
+Metrics present in the baseline but missing from the result fail the
+gate (a silently-skipped benchmark is itself a regression); new
+metrics not yet in the baseline are listed but pass.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+LOWER_IS_BETTER_UNITS = {"s", "s/read", "s/frame", "ms"}
+HIGHER_IS_BETTER_UNITS = {"MiB/s", "MB/s", "GiB/s", "frames/s", "x",
+                          "GOPs/s", "reads/s", "%", "dB"}
+# metrics whose unit-inferred direction is wrong or meaningless — e.g.
+# storage-as-%-of-budget is a compliance descriptor, not a score (a big
+# compression win would otherwise trip the higher-is-better '%' gate)
+NAME_OVERRIDES = {
+    "fig13/final_storage_pct_of_budget": "none",
+    "fig13/raw_storage_pct_of_budget": "none",
+}
+DEFAULT_TOLERANCE = 2.5
+
+
+def direction_for(unit: str, name: str = "") -> str:
+    if name in NAME_OVERRIDES:
+        return NAME_OVERRIDES[name]
+    if unit in LOWER_IS_BETTER_UNITS:
+        return "lower"
+    if unit in HIGHER_IS_BETTER_UNITS:
+        return "higher"
+    return "none"  # counts and other informational units never gate
+
+
+def load_rows(path: str) -> tuple:
+    with open(path) as f:
+        obj = json.load(f)
+    rows = obj["rows"] if isinstance(obj, dict) else obj
+    return {
+        f"{r['bench']}/{r['name']}": r for r in rows
+    }, (obj.get("scale") if isinstance(obj, dict) else None)
+
+
+def update_baseline(result_path: str, baseline_path: str) -> None:
+    rows, scale = load_rows(result_path)
+    entries = {}
+    for key, r in sorted(rows.items()):
+        entries[key] = {"value": r["value"], "unit": r["unit"],
+                        "direction": direction_for(r["unit"], key)}
+    with open(baseline_path, "w") as f:
+        json.dump({"scale": scale, "tolerance": DEFAULT_TOLERANCE,
+                   "entries": entries}, f, indent=2)
+        f.write("\n")
+    print(f"baseline written: {baseline_path} "
+          f"({len(entries)} entries at scale {scale})")
+
+
+def check(baseline_path: str, result_path: str) -> int:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    rows, scale = load_rows(result_path)
+    base_scale = baseline.get("scale")
+    if base_scale is not None and scale is not None and scale != base_scale:
+        print(f"FAIL: result ran at scale {scale}, baseline pins "
+              f"{base_scale} — values are not comparable")
+        return 1
+    default_tol = float(baseline.get("tolerance", DEFAULT_TOLERANCE))
+    regressions, missing, passed, informational = [], [], 0, 0
+    for key, entry in baseline["entries"].items():
+        if key not in rows:
+            missing.append(key)
+            continue
+        got = float(rows[key]["value"])
+        ref = float(entry["value"])
+        tol = float(entry.get("tolerance", default_tol))
+        direction = entry.get("direction") or direction_for(
+            entry["unit"], key
+        )
+        if direction == "lower":
+            bad = got > ref * tol
+        elif direction == "higher":
+            bad = got < ref / tol
+        else:
+            informational += 1
+            continue
+        if bad:
+            regressions.append(
+                f"  {key}: {got:.6g} {entry['unit']} vs baseline "
+                f"{ref:.6g} (tolerance {tol}x, {direction} is better)"
+            )
+        else:
+            passed += 1
+    new = sorted(set(rows) - set(baseline["entries"]))
+    print(f"checked {passed + len(regressions)} gated metrics "
+          f"({informational} informational, {len(new)} new/unbaselined)")
+    for key in new:
+        print(f"  new metric (add to baseline): {key}")
+    if missing:
+        print(f"FAIL: {len(missing)} baselined metric(s) missing from "
+              "the result (benchmark silently skipped?):")
+        for key in missing:
+            print(f"  {key}")
+    if regressions:
+        print(f"FAIL: {len(regressions)} regression(s):")
+        for line in regressions:
+            print(line)
+    if missing or regressions:
+        return 1
+    print("OK: no regressions")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--result", required=True)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from --result instead of "
+                         "checking against it")
+    args = ap.parse_args(argv)
+    if args.update_baseline:
+        update_baseline(args.result, args.baseline)
+        return 0
+    return check(args.baseline, args.result)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

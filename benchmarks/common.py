@@ -12,7 +12,7 @@ import os
 import tempfile
 import time
 from contextlib import contextmanager
-from typing import Iterator, List, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -6,7 +6,6 @@ when compression activates.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import Row, fresh_store, road, timer
 

@@ -5,11 +5,9 @@ resolution; homography re-estimation cost scales with rotation speed.
 """
 from __future__ import annotations
 
-import time
 
 from benchmarks.common import Row, pair, timer
 from repro.core import features
-from repro.kernels import ops, ref
 
 
 def run(scale: float = 1.0) -> list:
@@ -34,7 +32,6 @@ def run(scale: float = 1.0) -> list:
         rows.append(Row("fig19", f"{label}_encode", t_enc[0], "s"))
 
     # (b) camera dynamics: static / slow / fast panning → re-estimations
-    from repro.core import joint as J
     from benchmarks.common import fresh_store
 
     for pan, label in ((0.0, "static"), (0.5, "slow"), (2.0, "fast")):

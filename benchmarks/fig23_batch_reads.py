@@ -20,7 +20,6 @@ from __future__ import annotations
 import shutil
 import tempfile
 
-import numpy as np
 
 from benchmarks.common import Row, road, timer
 from repro.core.spec import ReadSpec

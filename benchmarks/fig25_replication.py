@@ -1,0 +1,146 @@
+"""Fig. 25 (beyond-paper) — replicated storage: degraded reads + scrub.
+
+Workload: a road clip written through `ReplicatedBackend` over three
+LocalFS children (R=3 replicas, write quorum 2).  Measures
+
+  * healthy vs degraded (one child down) read latency, long and short
+    reads — the degraded numbers must COMPLETE (availability is the
+    claim; latency is the price),
+  * write latency with a child down (quorum writes keep ingest alive),
+  * scrub repair throughput after the dead child comes back empty
+    (simulated disk replacement), and that the scrub restores full
+    replication — every catalog key back to R copies.
+
+The availability assertions run at every scale, so the CI bench-smoke
+job (``--quick``) is a real degraded-mode gate, not just a timer.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import Row, road, timer
+from repro.core.store import VSS
+from repro.storage import ReplicatedBackend
+
+N_CHILDREN = 3
+N_SHORT = 6
+
+
+def run(scale: float = 1.0) -> list:
+    frames = road(int(240 * scale))
+    dur = frames.shape[0] / 30.0
+    rows: list = []
+    root = tempfile.mkdtemp(prefix="vssbench25_")
+    vss = VSS(root, backend=ReplicatedBackend.local(
+        os.path.join(root, "objects"), N_CHILDREN,
+    ))
+    try:
+        _run(vss, frames, dur, rows)
+    finally:
+        vss.close()
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+def _run(vss: VSS, frames: np.ndarray, dur: float, rows: list) -> None:
+    backend: ReplicatedBackend = vss.backend
+    with timer() as t:
+        vss.write("v", frames, fps=30.0, codec="tvc-ll", gop_frames=8,
+                  budget_bytes=10**10)
+        backend.quiesce()
+    rows.append(Row("fig25", "healthy_write", t[0], "s",
+                    f"R={backend.replicas} W={backend.write_quorum}"))
+    keys = [
+        g.path
+        for p in vss.catalog.physicals_for("v")
+        for g in vss.catalog.gops_for(p.physical_id)
+        if g.joint_ref is None
+    ]
+    assert all(backend.replica_count(k) == backend.replicas for k in keys)
+
+    def read_suite(label: str) -> np.ndarray:
+        with timer() as t_long:
+            out = vss.read("v", codec="rgb", cache=False).frames
+        rows.append(Row("fig25", f"{label}_long_read", t_long[0], "s"))
+        rng = np.random.default_rng(1)
+        times = []
+        for _ in range(N_SHORT):
+            t0 = float(rng.uniform(0, dur - 1.0))
+            with timer() as t_short:
+                vss.read("v", t=(t0, t0 + 1.0), codec="rgb", cache=False)
+            times.append(t_short[0])
+        rows.append(Row("fig25", f"{label}_short_read",
+                        float(np.mean(times)), "s/read", f"n={N_SHORT}"))
+        return out
+
+    healthy = read_suite("healthy")
+
+    # -- degraded: one of three children dies ------------------------------
+    backend.mark_child_down(0)
+    degraded = read_suite("degraded")
+    # availability claim: every previously written GOP stays readable
+    assert degraded.shape == healthy.shape and np.array_equal(
+        degraded, healthy
+    ), "degraded read must return the identical frames"
+    with timer() as t:
+        vss.write("w", frames[: frames.shape[0] // 2], fps=30.0,
+                  codec="tvc-ll", gop_frames=8, budget_bytes=10**10)
+        backend.quiesce()
+    rows.append(Row("fig25", "degraded_write", t[0], "s",
+                    "quorum write with 1 of 3 children down"))
+
+    # -- scrub: dead child replaced with an empty disk ---------------------
+    child0 = backend.children[0]
+    shutil.rmtree(child0.root, ignore_errors=True)
+    os.makedirs(child0.root, exist_ok=True)
+    backend.mark_child_up(0)
+    with timer() as t:
+        report = vss.scrub()
+    repaired_bytes = sum(
+        vss.backend.stat(k).nbytes
+        for k in vss.catalog.all_joint_segment_paths()
+        if 0 in backend.replicas_for(k)
+    ) + sum(
+        g.nbytes for g in vss.catalog.all_gops()
+        if g.joint_ref is None and 0 in backend.replicas_for(g.path)
+    )
+    rows.append(Row("fig25", "scrub_repaired_replicas",
+                    float(report.replicas_repaired), "objects"))
+    rows.append(Row("fig25", "scrub_repair_throughput",
+                    repaired_bytes / (1 << 20) / max(t[0], 1e-9), "MiB/s",
+                    f"{report.replicas_repaired} replicas rewritten"))
+    # self-healing claim: replication factor restored for every key
+    all_keys = [
+        g.path for g in vss.catalog.all_gops() if g.joint_ref is None
+    ] + list(vss.catalog.all_joint_segment_paths())
+    assert report.replicas_repaired > 0
+    assert all(
+        backend.replica_count(k) == backend.replicas for k in all_keys
+    ), "scrub must restore full replication"
+
+    # healthy again: reads come back to full-speed paths
+    restored = vss.read("v", codec="rgb", cache=False).frames
+    assert np.array_equal(restored, healthy)
+    rows.append(Row("fig25", "fallback_reads",
+                    float(backend.stats.fallback_reads), "reads",
+                    "served by a non-preferred replica while degraded"))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller clip, same sweep + asserts")
+    ap.add_argument("--scale", type=float, default=None)
+    args = ap.parse_args()
+    scale = args.scale if args.scale is not None else (
+        0.5 if args.quick else 1.0
+    )
+    print("bench,name,value,unit,notes")
+    for row in run(scale):
+        print(row.csv())

@@ -1,13 +1,18 @@
 """Benchmark runner — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--scale 1.0] [--only fig10,...]
+                                            [--json BENCH_out.json]
 
-Prints ``bench,name,value,unit,notes`` CSV to stdout.
+Prints ``bench,name,value,unit,notes`` CSV to stdout; ``--json`` also
+writes the rows (plus run metadata) as JSON — the artifact the nightly
+workflow uploads and feeds to ``benchmarks/check_regression.py``.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import platform
 import sys
 import time
 import traceback
@@ -27,6 +32,8 @@ MODULES = (
     "fig21_end_to_end",
     "fig22_backend_scaling",
     "fig23_batch_reads",
+    "fig24_ingest_pipeline",
+    "fig25_replication",
     "table2_joint_quality",
     "roofline",
 )
@@ -37,11 +44,14 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--only", default=None,
                     help="comma-separated module prefixes")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + metadata as JSON")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
 
     print("bench,name,value,unit,notes")
     failed = []
+    collected = []
     for mod_name in MODULES:
         if only and not any(mod_name.startswith(o) for o in only):
             continue
@@ -50,12 +60,26 @@ def main() -> None:
             mod = importlib.import_module(f"benchmarks.{mod_name}")
             for row in mod.run(args.scale):
                 print(row.csv(), flush=True)
+                collected.append(row)
             print(f"# {mod_name} done in {time.perf_counter()-t0:.1f}s",
                   flush=True)
         except Exception as e:
             failed.append(mod_name)
             print(f"# {mod_name} FAILED: {type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "scale": args.scale,
+                "platform": platform.platform(),
+                "python": platform.python_version(),
+                "failed_modules": failed,
+                "rows": [
+                    {"bench": r.bench, "name": r.name, "value": r.value,
+                     "unit": r.unit, "notes": r.notes}
+                    for r in collected
+                ],
+            }, f, indent=2)
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

@@ -6,7 +6,6 @@ and admits more.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import Row, fresh_store, pair
 from repro.core.quality import exact_psnr

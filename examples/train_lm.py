@@ -20,7 +20,7 @@ import tempfile
 
 import numpy as np
 
-from repro.configs import get_config, smoke_config
+from repro.configs import smoke_config
 from repro.core.store import VSS
 from repro.data.tokens import TokenPipeline, write_token_corpus
 from repro.launch.steps import TrainHyper

@@ -18,7 +18,7 @@ Defaults γ=2, ζ=1, τ=40 dB, exactly the prototype's.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional
 
 from repro.core.catalog import Catalog
 from repro.core.types import GopMeta, PhysicalMeta, mse_to_psnr

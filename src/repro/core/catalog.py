@@ -14,7 +14,7 @@ import json
 import sqlite3
 import threading
 import time
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.types import Box, GopMeta, PhysicalMeta
 

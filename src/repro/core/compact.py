@@ -11,7 +11,6 @@ the catalog rows are moved, and the second video is dropped.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
 
 from repro.core.catalog import Catalog
 from repro.core.types import PhysicalMeta, mse_to_psnr

@@ -97,6 +97,11 @@ DEFAULT_IO_TABLE: Dict[str, Tuple[float, float]] = {
     "memory": (0.0, 1e-4),
     "localfs": (2.0e3, 2e-2),
     "sharded": (2.0e3, 1.2e-2),
+    # `ReplicatedBackend.kind_for` answers with the serving CHILD's kind
+    # whenever a live replica holds the key, so this entry prices only
+    # the fallback case (key resolvable on no live replica — a read that
+    # will fail or be repaired); charge it like a slow local fetch
+    "replicated": (2.4e3, 2e-2),
     "remote": (5.0e5, 2e-1),
     "default": (2.0e3, 2e-2),
 }

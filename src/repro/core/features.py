@@ -11,7 +11,6 @@ All functions take (H, W, C) uint8 frames.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Optional, Tuple
 
 import numpy as np

@@ -16,7 +16,7 @@ Brute-forcing all O(n²) GOP pairs is prohibitive, so VSS:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 

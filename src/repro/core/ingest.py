@@ -55,7 +55,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
-from typing import Deque, Dict, Iterable, List, Optional, Set, Tuple
+from typing import Deque, Iterable, List, Optional, Set, Tuple
 
 DEFAULT_QUEUE_GOPS = 32
 DEFAULT_WORKERS = 2

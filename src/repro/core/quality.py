@@ -20,10 +20,8 @@ refined by observation at cache-admission time).
 """
 from __future__ import annotations
 
-import dataclasses
-import math
 import threading
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 

@@ -72,12 +72,10 @@ from repro.core.spec import ReadSpec, ResolvedRead, WriteSpec
 from repro.core.types import (
     DEFAULT_QUALITY_EPS_DB,
     Box,
-    Fragment,
     GopMeta,
     PhysicalMeta,
     chain_mse_bound,
     full_roi,
-    mse_to_psnr,
 )
 
 DEFAULT_BUDGET_MULTIPLE = 10.0  # §4 administrator default
@@ -226,7 +224,8 @@ class VSS:
         self.catalog = Catalog(os.path.join(root, "catalog.sqlite"))
         if backend is None:
             backend = os.environ.get(_storage.ENV_VAR, _storage.DEFAULT_SPEC)
-        if isinstance(backend, str):
+        made_backend = isinstance(backend, str)
+        if made_backend:
             backend = _storage.make_backend(
                 backend, os.path.join(root, "objects")
             )
@@ -243,7 +242,13 @@ class VSS:
         if recorded != fp:
             if self.catalog.any_gops():
                 # recorded None here means a pre-layout-stamp catalog
-                # (absolute paths on a bare directory) — unmigratable
+                # (absolute paths on a bare directory) — unmigratable.
+                # Release what this constructor opened before raising:
+                # callers that probe-and-retry (CheckpointManager) must
+                # not accumulate sqlite handles and worker pools.
+                self.catalog.close()
+                if made_backend:
+                    self.backend.close()
                 raise ValueError(
                     f"store at {root!r} was created with storage layout"
                     f" {recorded!r} but opened with {fp!r}; reopen with a"
@@ -1085,6 +1090,29 @@ class VSS:
             "bytes": self.catalog.total_bytes(name),
             "budget": self.catalog.get_budget(name),
         }
+
+    def scrub(self, *, collect_orphans: bool = False):
+        """On-demand integrity pass over every object the catalog
+        references.  On a `ReplicatedBackend` this is the self-healing
+        scrub: every replica of every GOP is fetched and validated
+        (`validate_gop_bytes`), under-replicated / torn / divergent
+        objects are re-replicated from a healthy copy, and misplaced
+        replicas are pruned — run it after replacing a failed volume to
+        restore full replication.  On single-copy backends it degrades
+        to the startup scavenge.  Queued ingest windows are drained
+        first so the scrub sees a settled catalog.
+
+        ``collect_orphans`` additionally deletes objects no catalog row
+        references.  Leave it off (the default) unless writes are
+        quiesced: publishes are put-then-index, so a concurrent
+        writer's freshly published window is indistinguishable from an
+        orphan and collecting it would manufacture an
+        indexed-but-missing GOP.  Startup recovery — which runs before
+        any writer exists — always collects."""
+        if self._ingest is not None:
+            self._ingest.drain()
+        return self.backend.scrub(self.catalog,
+                                  collect_orphans=collect_orphans)
 
     def drop(self, name: str) -> None:
         """Delete a logical video: catalog rows and backend objects."""

@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 

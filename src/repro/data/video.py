@@ -17,7 +17,7 @@ module procedurally generates equivalent structure at any scale:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

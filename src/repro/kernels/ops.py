@@ -13,12 +13,10 @@ Every function here has a matching oracle in :mod:`repro.kernels.ref`.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import utils
 from repro.kernels import delta_codec as _dc

@@ -22,7 +22,6 @@ drives the paper's look-back cost c_l.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

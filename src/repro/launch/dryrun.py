@@ -19,7 +19,7 @@ import argparse
 import json
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -8,7 +8,7 @@ allocation happens anywhere in this module.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +16,6 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
-from repro.launch.mesh import data_axes
 from repro.models import model as M
 from repro.models.sharding import ShardCtx, param_shardings
 

@@ -11,8 +11,7 @@ over the "model" mesh axis (EP) and dropped tokens degrade gracefully.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.ad_checkpoint

@@ -9,7 +9,6 @@ small (vectors / one matrix per head) and shard over the "model" axis.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ import re
 from typing import Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

@@ -20,6 +20,10 @@ Backends
   * `TieredBackend` — bounded hot memory tier over any cold backend,
     write-through; spill ordering is wired to the catalog's LRU_VSS
     sequence numbers so eviction *policy* stays in `repro.core.cache`.
+  * `ReplicatedBackend` — quorum-replicates each key over R of N
+    children (consistent-hash placement); reads fall back across
+    replicas, the scrubber (`scrub`) re-replicates what a lost child
+    or torn copy left under-replicated.
 
 Selection: ``VSS(root, backend=...)`` accepts an instance or a spec
 string; with neither, the ``VSS_STORAGE_BACKEND`` env var (default
@@ -27,6 +31,7 @@ string; with neither, the ``VSS_STORAGE_BACKEND`` env var (default
 
 Spec grammar (see `make_backend`):
     local | local:fsync | memory | sharded:<N> | tiered[:<cold spec>]
+    | replicated[:<N>[:<R>[:<W>]]]
 """
 from __future__ import annotations
 
@@ -34,12 +39,18 @@ from repro.storage.base import (
     ObjectNotFound,
     ObjectStat,
     RecoveryReport,
+    ScrubReport,
     StorageBackend,
 )
 from repro.storage.localfs import LocalFSBackend
 from repro.storage.memory import MemoryBackend
-from repro.storage.recovery import scavenge, validate_gop_bytes
-from repro.storage.sharded import ShardedBackend
+from repro.storage.recovery import scavenge, scrub, validate_gop_bytes
+from repro.storage.replicated import (
+    ChildDownError,
+    ReplicatedBackend,
+    ReplicationError,
+)
+from repro.storage.sharded import HashRing, ShardedBackend
 from repro.storage.tiered import TieredBackend
 
 ENV_VAR = "VSS_STORAGE_BACKEND"
@@ -50,12 +61,16 @@ def make_backend(spec: str, root: str) -> StorageBackend:
     """Build a backend from a spec string; ``root`` anchors fs-backed
     layouts (each spec owns a distinct subtree so they never collide).
 
-        local            one volume under <root>
-        local:fsync      same, fsync on every publish
-        memory           no persistence
-        sharded:<N>      N LocalFS volumes under <root>/vol*
-        tiered           memory hot tier over local
-        tiered:<spec>    memory hot tier over any cold spec
+        local                    one volume under <root>
+        local:fsync              same, fsync on every publish
+        memory                   no persistence
+        sharded:<N>              N LocalFS volumes under <root>/vol*
+        tiered                   memory hot tier over local
+        tiered:<spec>            memory hot tier over any cold spec
+        replicated               3 LocalFS children, R=3 replicas, W=2
+        replicated:<N>:<R>:<W>   N children under <root>/replica*,
+                                 R = min(3, N) and W = majority(R)
+                                 unless given
     """
     spec = (spec or DEFAULT_SPEC).strip().lower()
     head, _, rest = spec.partition(":")
@@ -68,21 +83,37 @@ def make_backend(spec: str, root: str) -> StorageBackend:
         return ShardedBackend.local(root, n)
     if head == "tiered":
         return TieredBackend(make_backend(rest or DEFAULT_SPEC, root))
+    if head == "replicated":
+        parts = [int(p) for p in rest.split(":") if p] if rest else []
+        if len(parts) > 3:
+            raise ValueError(f"unknown storage backend spec {spec!r}")
+        n = parts[0] if parts else 3
+        return ReplicatedBackend.local(
+            root, n,
+            replicas=parts[1] if len(parts) > 1 else None,
+            write_quorum=parts[2] if len(parts) > 2 else None,
+        )
     raise ValueError(f"unknown storage backend spec {spec!r}")
 
 
 __all__ = [
     "ENV_VAR",
     "DEFAULT_SPEC",
+    "ChildDownError",
+    "HashRing",
     "LocalFSBackend",
     "MemoryBackend",
     "ObjectNotFound",
     "ObjectStat",
     "RecoveryReport",
+    "ReplicatedBackend",
+    "ReplicationError",
+    "ScrubReport",
     "ShardedBackend",
     "StorageBackend",
     "TieredBackend",
     "make_backend",
     "scavenge",
+    "scrub",
     "validate_gop_bytes",
 ]

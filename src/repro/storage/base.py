@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 
 class ObjectNotFound(KeyError):
@@ -120,6 +120,19 @@ class StorageBackend(abc.ABC):
 
         return scavenge(self, catalog)
 
+    def scrub(self, catalog, *, collect_orphans: bool = False):
+        """Deep integrity pass (`VSS.scrub`).  Replicated backends
+        override this to validate every replica and re-replicate
+        under-replicated objects; for single-copy backends the best
+        available check IS the key-level scavenge, so that is the
+        default.  ``collect_orphans`` additionally deletes objects no
+        catalog row references — only safe with writes quiesced (a
+        publisher mid put-then-index looks exactly like an orphan);
+        startup `recover` always collects."""
+        from repro.storage.recovery import scavenge
+
+        return scavenge(self, catalog, collect_orphans=collect_orphans)
+
     def close(self) -> None:  # pragma: no cover - trivial
         pass
 
@@ -140,4 +153,21 @@ class RecoveryReport:
         return not (
             self.temps_removed or self.orphans_removed
             or self.gops_dropped or self.gops_repaired
+        )
+
+
+@dataclasses.dataclass
+class ScrubReport(RecoveryReport):
+    """RecoveryReport plus the replica-level counts a scrub adds."""
+
+    replicas_repaired: int = 0   # missing/torn/divergent copies rewritten
+    replicas_pruned: int = 0     # replicas on children outside the key's set
+    replicas_skipped: int = 0    # replica slots unverifiable (child down)
+
+    @property
+    def clean(self) -> bool:
+        return (
+            RecoveryReport.clean.fget(self)  # type: ignore[union-attr]
+            and not (self.replicas_repaired or self.replicas_pruned
+                     or self.replicas_skipped)
         )

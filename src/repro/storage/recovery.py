@@ -1,4 +1,4 @@
-"""Startup scavenger — reconcile backend objects against the catalog.
+"""Startup scavenger + replica scrubber — reconcile objects and catalog.
 
 The write protocol is: (1) put the payload (atomic temp + replace),
 (2) insert the catalog row.  SQLite commits are atomic, so after a
@@ -19,10 +19,28 @@ One benign mismatch is repaired rather than dropped: a crash between
 the deferred compressor's `put` and its catalog `nbytes` update leaves
 a valid (smaller, zstd-wrapped) object with a stale size — the row's
 size is corrected in place.
+
+`scrub` is the replicated-placement counterpart (`ReplicatedBackend`
+runs it both at startup `recover` and behind `VSS.scrub()`): the
+generic scavenge can't see a single lost replica — `stat`/`get` fall
+back to a surviving copy, so the backend looks whole right up until
+the LAST copy dies.  The scrubber walks the catalog per replica
+instead: every copy of every referenced object is fetched and
+validated with `validate_gop_bytes`, under-replicated or torn or
+divergent objects are re-replicated from a healthy copy, orphan and
+misplaced replicas are pruned per child, and a row is dropped only
+when every placement slot was *verified* empty — a down child's slots
+are skipped (counted, never condemned), so one dead volume can't turn
+into catalog data loss.
 """
 from __future__ import annotations
 
-from repro.storage.base import ObjectNotFound, RecoveryReport, StorageBackend
+from repro.storage.base import (
+    ObjectNotFound,
+    RecoveryReport,
+    ScrubReport,
+    StorageBackend,
+)
 
 
 def validate_gop_bytes(data: bytes) -> bool:
@@ -49,7 +67,14 @@ def validate_gop_bytes(data: bytes) -> bool:
         return False
 
 
-def scavenge(backend: StorageBackend, catalog) -> RecoveryReport:
+def scavenge(backend: StorageBackend, catalog, *,
+             collect_orphans: bool = True) -> RecoveryReport:
+    """``collect_orphans=False`` skips the final unreferenced-key sweep.
+    Orphan deletion is only safe while nothing is publishing: the write
+    protocol is put-then-index, so a concurrent publisher's object is
+    briefly an "orphan" that deleting would turn into an
+    indexed-but-missing GOP.  Startup recovery (single-threaded) always
+    collects; an online scrub must not."""
     report = RecoveryReport()
     report.temps_removed = backend.sweep_temps()
 
@@ -76,11 +101,114 @@ def scavenge(backend: StorageBackend, catalog) -> RecoveryReport:
             _drop_gop(catalog, g)
             report.gops_dropped += 1
 
-    for key in backend.list():
-        if key not in referenced:
-            backend.delete(key)
-            report.orphans_removed += 1
+    if collect_orphans:
+        for key in backend.list():
+            if key not in referenced:
+                backend.delete(key)
+                report.orphans_removed += 1
     return report
+
+
+# ---------------------------------------------------------------------------
+# replica scrubber (ReplicatedBackend.recover / VSS.scrub)
+# ---------------------------------------------------------------------------
+
+def scrub(backend, catalog, *, collect_orphans: bool = False) -> ScrubReport:
+    """Validate and self-heal every replica of every catalog object.
+
+    ``backend`` is a `ReplicatedBackend` (anything exposing
+    ``replicas_for``/``replica_get``/``replica_put``/``replica_delete``/
+    ``replica_list``/``live_children``).  See the module docstring for
+    the invariants; in short — repair from any healthy copy, prune what
+    nothing references, skip (never condemn) what a down child makes
+    unverifiable.
+
+    Validation, repair and misplaced-replica pruning are safe against
+    concurrent publishes (a catalog row's objects are durable before
+    the row exists, and writers only ever touch a key's own replica
+    set).  Deleting UNREFERENCED keys is not — a publisher mid
+    put-then-index looks exactly like an orphan — so the orphan sweep
+    runs only with ``collect_orphans=True`` (startup recovery, or an
+    operator who has quiesced writes)."""
+    report = ScrubReport()
+    report.temps_removed = backend.sweep_temps()
+
+    referenced = set(catalog.all_joint_segment_paths())
+    for g in catalog.all_gops():
+        if g.joint_ref is not None:
+            continue  # payload lives in the joint record's segment objects
+        referenced.add(g.path)
+        healthy, torn, missing, down = _probe(backend, g.path,
+                                              validate=validate_gop_bytes)
+        report.replicas_skipped += len(down)
+        if not healthy:
+            if down:
+                continue  # a down child may hold the last good copy
+            for ci in torn:
+                backend.replica_delete(ci, g.path)
+            _drop_gop(catalog, g)
+            report.gops_dropped += 1
+            continue
+        # canonical copy: prefer the replica matching the row's recorded
+        # size (a deferred rewrite that reached quorum is canonical even
+        # while a straggler child still holds the older, larger object)
+        canonical = next(
+            (d for _ci, d in healthy if len(d) == g.nbytes), healthy[0][1]
+        )
+        if len(canonical) != g.nbytes:
+            catalog.update_gop(g.gop_id, nbytes=len(canonical),
+                               zwrapped=_looks_wrapped(canonical))
+            report.gops_repaired += 1
+        divergent = [ci for ci, d in healthy if d != canonical]
+        for ci in (*missing, *torn, *divergent):
+            backend.replica_put(ci, g.path, canonical)
+            report.replicas_repaired += 1
+
+    # joint segment objects are not standalone GOPs (no byte-level
+    # validation applies) — repair by existence only
+    for key in catalog.all_joint_segment_paths():
+        healthy, torn, missing, down = _probe(backend, key, validate=None)
+        report.replicas_skipped += len(down)
+        if not healthy:
+            continue  # unrepairable here; reads fall back / plan around
+        data = healthy[0][1]
+        for ci in (*missing, *torn):
+            backend.replica_put(ci, key, data)
+            report.replicas_repaired += 1
+
+    # orphan + misplacement sweep, per child (the union-level sweep in
+    # `scavenge` would miss a replica sitting on the wrong child)
+    orphan_keys = set()
+    for ci in backend.live_children():
+        for key in backend.replica_list(ci):
+            if key not in referenced:
+                if collect_orphans:
+                    backend.replica_delete(ci, key)
+                    orphan_keys.add(key)
+            elif ci not in backend.replicas_for(key):
+                backend.replica_delete(ci, key)
+                report.replicas_pruned += 1
+    report.orphans_removed = len(orphan_keys)
+    return report
+
+
+def _probe(backend, key, validate=None):
+    """Classify every placement slot of ``key``: (healthy [(ci, data)],
+    torn [ci], missing [ci], down/unverifiable [ci])."""
+    healthy, torn, missing, down = [], [], [], []
+    for ci in backend.replicas_for(key):
+        try:
+            data = backend.replica_get(ci, key)
+        except ObjectNotFound:
+            missing.append(ci)
+        except Exception:
+            down.append(ci)  # unreachable child: unverifiable, not absent
+        else:
+            if validate is not None and not validate(data):
+                torn.append(ci)
+            else:
+                healthy.append((ci, data))
+    return healthy, torn, missing, down
 
 
 def _looks_wrapped(data: bytes) -> bool:

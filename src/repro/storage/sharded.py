@@ -30,6 +30,50 @@ def _hash64(s: str) -> int:
     return int.from_bytes(hashlib.md5(s.encode()).digest()[:8], "big")
 
 
+class HashRing:
+    """Consistent-hash ring with virtual nodes over N slots.
+
+    ``owner(key)`` is the slot the key hashes to; ``preference(key, r)``
+    walks clockwise from there collecting the first ``r`` DISTINCT
+    slots — the replica preference order `ReplicatedBackend` places
+    copies by.  Both are pure functions of the slot count, so two rings
+    with equal ``n_slots`` resolve every key identically (what makes
+    layout fingerprints meaningful) and adding a slot moves only ~1/N
+    of the keyspace."""
+
+    def __init__(self, n_slots: int, vnodes: int = VNODES_PER_VOLUME):
+        if n_slots < 1:
+            raise ValueError("HashRing needs at least one slot")
+        self.n_slots = n_slots
+        ring = []
+        for vi in range(n_slots):
+            for r in range(vnodes):
+                ring.append((_hash64(f"vol{vi}#vnode{r}"), vi))
+        ring.sort()
+        self._keys = [h for h, _ in ring]
+        self._slots = [v for _, v in ring]
+
+    def owner(self, key: str) -> int:
+        i = bisect.bisect_left(self._keys, _hash64(key))
+        if i == len(self._keys):
+            i = 0
+        return self._slots[i]
+
+    def preference(self, key: str, count: int) -> List[int]:
+        """The first ``count`` distinct slots clockwise from the key's
+        position — slot 0 of the result is ``owner(key)``."""
+        count = min(count, self.n_slots)
+        start = bisect.bisect_left(self._keys, _hash64(key))
+        out: List[int] = []
+        for j in range(len(self._slots)):
+            slot = self._slots[(start + j) % len(self._slots)]
+            if slot not in out:
+                out.append(slot)
+                if len(out) == count:
+                    break
+        return out
+
+
 class ShardedBackend(StorageBackend):
     KIND = "sharded"
 
@@ -37,13 +81,7 @@ class ShardedBackend(StorageBackend):
         if not volumes:
             raise ValueError("ShardedBackend needs at least one volume")
         self.volumes = list(volumes)
-        ring = []
-        for vi in range(len(self.volumes)):
-            for r in range(VNODES_PER_VOLUME):
-                ring.append((_hash64(f"vol{vi}#vnode{r}"), vi))
-        ring.sort()
-        self._ring_keys = [h for h, _ in ring]
-        self._ring_vols = [v for _, v in ring]
+        self.ring = HashRing(len(self.volumes))
         # volume count sets layout/capacity; useful parallelism is capped
         # by cores (page-cache reads are memcpy-bound once warm) — more
         # workers than cores just adds scheduling overhead
@@ -62,10 +100,7 @@ class ShardedBackend(StorageBackend):
 
     # -- placement ---------------------------------------------------------
     def volume_for(self, key: str) -> int:
-        i = bisect.bisect_left(self._ring_keys, _hash64(key))
-        if i == len(self._ring_keys):
-            i = 0
-        return self._ring_vols[i]
+        return self.ring.owner(key)
 
     def _vol(self, key: str) -> StorageBackend:
         return self.volumes[self.volume_for(key)]

@@ -16,7 +16,7 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.storage.base import ObjectNotFound, ObjectStat, StorageBackend
+from repro.storage.base import ObjectStat, StorageBackend
 
 DEFAULT_HOT_BYTES = 256 * 1024 * 1024
 
@@ -165,14 +165,25 @@ class TieredBackend(StorageBackend):
         # tier's, so tiered-over-X and plain X are interchangeable
         return self.cold.layout_fingerprint()
 
-    def recover(self, catalog):
-        with self._lock:  # hot tier does not survive a restart anyway
+    def _drop_hot(self) -> None:
+        with self._lock:
             self._hot.clear()
             self._insert_seq.clear()
             self._hot_total = 0
-        from repro.storage.recovery import scavenge
 
-        return scavenge(self, catalog)
+    def recover(self, catalog):
+        # the hot tier does not survive a restart anyway; recovery is
+        # the COLD tier's (tiered-over-replicated must run the replica
+        # scrub, not a generic scavenge whose probes the read-fallback
+        # would satisfy even with a replica lost)
+        self._drop_hot()
+        return self.cold.recover(catalog)
+
+    def scrub(self, catalog, *, collect_orphans: bool = False):
+        # drop hot copies first: a scrub may rewrite divergent cold
+        # objects, and a stale hot hit would mask the repaired bytes
+        self._drop_hot()
+        return self.cold.scrub(catalog, collect_orphans=collect_orphans)
 
     def close(self) -> None:
         self.cold.close()

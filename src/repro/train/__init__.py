@@ -1,2 +1,6 @@
-from repro.train.checkpoint import CheckpointManager, tree_to_frames, frames_to_tree  # noqa: F401
+from repro.train.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    frames_to_tree,
+    tree_to_frames,
+)
 from repro.train.runner import Trainer, TrainerConfig  # noqa: F401

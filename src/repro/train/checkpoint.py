@@ -133,11 +133,25 @@ class CheckpointManager:
         self.keep_last = keep_last
         self.derived_reprs = derived_reprs
         os.makedirs(root, exist_ok=True)
-        self.vss = vss or VSS(
-            os.path.join(root, "vss"),
-            enable_deferred=False,  # we drive deferred compression explicitly
-            enable_compaction=False,
-        )
+        # checkpoints exist to survive a process death: pin the default
+        # store to the durable local layout instead of inheriting
+        # VSS_STORAGE_BACKEND (a memory-backed checkpoint store cannot
+        # resume anything).  A pre-existing store written under another
+        # persistent layout still opens: the layout guard rejects the
+        # local pin and we fall back to the env-selected backend that
+        # created it.  Callers with a dedicated replicated/sharded
+        # checkpoint volume pass their own ``vss``.
+        if vss is None:
+            store_kw = dict(
+                enable_deferred=False,  # deferred compression driven here
+                enable_compaction=False,
+            )
+            try:
+                vss = VSS(os.path.join(root, "vss"), backend="local",
+                          **store_kw)
+            except ValueError:
+                vss = VSS(os.path.join(root, "vss"), **store_kw)
+        self.vss = vss
         self._manifest_path = os.path.join(root, f"{run}.manifest.json")
         self._manifest: Dict[str, Dict] = self._load_manifest()
         self._worker: Optional[threading.Thread] = None

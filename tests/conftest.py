@@ -6,7 +6,6 @@ assert "--xla_force_host_platform_device_count" not in os.environ.get(
     "XLA_FLAGS", ""
 ), "tests must run without the dry-run's forced device count"
 
-import numpy as np
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,10 +1,7 @@
 """LRU_VSS eviction policy (§4)."""
-import numpy as np
-import pytest
 
 from repro.core.cache import CachePolicy
 from repro.core.quality import exact_psnr
-from repro.core.store import VSS
 
 
 def _fill(vss, clip, budget):

@@ -1,9 +1,7 @@
 """Deferred compression (§5.2) and compaction (§5.3)."""
-import numpy as np
 
 from repro.core import compact as C
 from repro.core.deferred import is_wrapped, unwrap_bytes, wrap_bytes
-from repro.core.store import VSS
 
 
 def test_wrap_roundtrip():

@@ -1,6 +1,5 @@
 """Pipelined ingest: queue semantics, multi-stream concurrency, error
 propagation, durability barriers, and crash-mid-queue recovery."""
-import os
 import threading
 
 import numpy as np
@@ -274,7 +273,9 @@ def _simulate_crash(vss):
 
 def test_crash_mid_queue_keeps_durable_prefix(tmp_path, clip):
     root = str(tmp_path / "vss")
-    vss = VSS(root)
+    # pinned to the local layout: the reopen below depends on objects
+    # surviving the process "death"
+    vss = VSS(root, backend="local")
     w = _writer(vss, "cam", codec="tvc-ll", gop_frames=15)
     w.append(clip[:30])           # windows 1+2 submitted
     vss.ingest.barrier({"cam"})   # ...and durable+indexed
@@ -287,7 +288,7 @@ def test_crash_mid_queue_keeps_durable_prefix(tmp_path, clip):
     assert n_indexed == 2
     _simulate_crash(vss)
 
-    vss2 = VSS(root)  # startup scavenger + drop_empty_logicals
+    vss2 = VSS(root, backend="local")  # scavenger + drop_empty_logicals
     try:
         assert vss2.recovery.orphans_removed == 1  # the half-window object
         assert vss2.recovery.gops_dropped == 0
@@ -334,12 +335,12 @@ def test_clean_close_drains_the_queue(tmp_path, clip):
     """VSS.close() lands every queued window before the clean-shutdown
     marker: a reopened store sees the full video, no scavenge needed."""
     root = str(tmp_path / "vss")
-    vss = VSS(root)
+    vss = VSS(root, backend="local")  # persistence-dependent reopen below
     w = _writer(vss, "v", codec="tvc-ll", gop_frames=15, batch_gops=2)
     w.append(clip)
     w.close()
     vss.close()
-    vss2 = VSS(root)
+    vss2 = VSS(root, backend="local")
     try:
         assert vss2.recovery.clean
         assert np.array_equal(vss2.read("v", cache=False).frames, clip)

@@ -1,9 +1,7 @@
 """Joint compression (§5.1): Algorithm 1, recovery quality, candidates."""
 import numpy as np
-import pytest
 
 from repro.core.quality import exact_psnr
-from repro.core.store import VSS
 from repro.data.video import synthesize_overlapping_pair
 
 

@@ -6,7 +6,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import SHAPES
 from repro.launch.specs import batch_specs, cache_specs
 from repro.models import model as M
-from repro.models.sharding import param_specs, spec_for
+from repro.models.sharding import spec_for
 
 
 def test_cell_enumeration_counts():

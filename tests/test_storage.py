@@ -8,6 +8,7 @@ from repro.storage import (
     LocalFSBackend,
     MemoryBackend,
     ObjectNotFound,
+    ReplicatedBackend,
     ShardedBackend,
     TieredBackend,
     make_backend,
@@ -15,7 +16,7 @@ from repro.storage import (
 from repro.storage.localfs import TEMP_MARKER
 
 BACKEND_SPECS = ("memory", "local", "local:fsync", "sharded2", "sharded4",
-                 "tiered")
+                 "tiered", "replicated3", "replicated4r3")
 
 
 def _make(spec, root):
@@ -31,6 +32,10 @@ def _make(spec, root):
         return ShardedBackend.local(root, 4)
     if spec == "tiered":
         return TieredBackend(LocalFSBackend(root), hot_bytes=1 << 20)
+    if spec == "replicated3":
+        return ReplicatedBackend.local(root, 3)
+    if spec == "replicated4r3":
+        return ReplicatedBackend.local(root, 4, replicas=3, write_quorum=2)
     raise AssertionError(spec)
 
 
@@ -281,7 +286,9 @@ def test_crash_recovery_scavenges_and_preserves_committed(tmp_path,
     from repro.core.store import VSS
 
     root = str(tmp_path / "vss")
-    vss = VSS(root)
+    # pinned to the local layout: the test tears objects behind the
+    # store's back at known filesystem paths
+    vss = VSS(root, backend="local")
     vss.write("v", short_clip, fps=30.0, codec="tvc-hi", gop_frames=10)
     vss.read("v", t=(0.0, 0.6), codec="tvc-med")  # cache a derived view
     view_gops = [
@@ -304,7 +311,7 @@ def test_crash_recovery_scavenges_and_preserves_committed(tmp_path,
     with open(orphan + TEMP_MARKER + "999-0", "wb") as f:
         f.write(b"partial")  # in-flight temp artifact
 
-    vss2 = VSS(root)  # startup scavenger runs here
+    vss2 = VSS(root, backend="local")  # startup scavenger runs here
     rep = vss2.recovery
     assert rep.temps_removed == 1
     assert rep.orphans_removed == 1
@@ -330,14 +337,14 @@ def test_recovery_repairs_stale_deferred_size(tmp_path, short_clip):
     from repro.core.store import VSS
 
     root = str(tmp_path / "vss")
-    vss = VSS(root)
+    vss = VSS(root, backend="local")  # persistence-dependent reopen below
     vss.write("v", short_clip, fps=30.0, codec="rgb", gop_frames=10)
     g = vss.catalog.gops_for(vss.catalog.get_original_id("v"))[0]
     raw = vss.backend.get(g.path)
     vss.backend.put(g.path, wrap_bytes(raw, 3))  # ...crash before update
     vss.catalog.close()  # crash: no clean-shutdown marker is written
 
-    vss2 = VSS(root)
+    vss2 = VSS(root, backend="local")
     assert vss2.recovery.gops_repaired == 1
     assert vss2.recovery.gops_dropped == 0
     g2 = vss2.catalog.get_gop(g.gop_id)
@@ -363,11 +370,11 @@ def test_crash_reopen_without_close_runs_scavenger(tmp_path, short_clip):
     from repro.core.store import VSS
 
     root = str(tmp_path / "vss")
-    vss = VSS(root)
+    vss = VSS(root, backend="local")  # persistence-dependent reopen below
     vss.write("v", short_clip, fps=30.0, codec="tvc-med", gop_frames=10)
     vss.backend.put("v/orphan.tvc", b"debris")  # no catalog row
     vss.catalog.close()  # crash
-    vss2 = VSS(root)
+    vss2 = VSS(root, backend="local")
     assert vss2.recovery.orphans_removed == 1
     vss2.close()
 
@@ -378,14 +385,16 @@ def test_layout_mismatch_refuses_to_open(tmp_path, short_clip):
     from repro.core.store import VSS
 
     root = str(tmp_path / "vss")
-    vss = VSS(root)  # default local layout
+    vss = VSS(root, backend="local")  # pinned: the mismatches are the point
     vss.write("v", short_clip, fps=30.0, codec="tvc-med", gop_frames=10)
     vss.close()
     with pytest.raises(ValueError, match="storage layout"):
         VSS(root, backend="sharded:2")
     with pytest.raises(ValueError, match="storage layout"):
         VSS(root, backend=MemoryBackend())
-    vss2 = VSS(root)  # original layout still opens and reads fine
+    with pytest.raises(ValueError, match="storage layout"):
+        VSS(root, backend="replicated:3")
+    vss2 = VSS(root, backend="local")  # original layout still opens fine
     assert vss2.read("v", codec="rgb", cache=False).frames.shape \
         == short_clip.shape
     vss2.close()

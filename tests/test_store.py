@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 from repro.core.quality import exact_psnr
-from repro.core.store import VSS
 
 
 def test_write_read_roundtrip_lossless(vss, clip):

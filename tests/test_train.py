@@ -1,5 +1,4 @@
 """Training substrate: fault tolerance, checkpoints on VSS, data pipeline."""
-import os
 
 import jax
 import numpy as np
