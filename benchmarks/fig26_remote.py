@@ -1,0 +1,158 @@
+"""Fig. 26 (beyond-paper) — remote object store: cold reads vs the
+write-back cache.
+
+Workload: GOP-sized objects on the bundled `ObjectServer`, whose
+backing store carries a small injected per-request latency
+(`FaultInjectingBackend`) so the loopback hop behaves like a short WAN
+round trip instead of a syscall.  Measures
+
+  * repeated-access reads — every pass re-fetches through a bare
+    `RemoteBackend` (cold: each pass pays the wire) vs through
+    ``tiered:remote`` (the disk write-back cache: pass 1 promotes,
+    later passes serve from the hot tier).  The cache must win by
+    >= 2x — asserted at every scale, so the CI bench-smoke job
+    (``--quick``) is a real caching gate, not a timer;
+  * ingest — write-back puts (hot admit now, background flush) vs
+    write-through remote puts, plus the explicit ``flush()`` barrier
+    cost, which is where the deferred upload bill actually lands;
+  * retry overhead — the same read sweep while the server's store
+    throws transient 5xx at a fixed rate, priced per successful read.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import Row, timer
+from repro.storage import (
+    FaultInjectingBackend,
+    LocalFSBackend,
+    MemoryBackend,
+    ObjectServer,
+    RemoteBackend,
+    TieredBackend,
+)
+
+OBJECT_BYTES = 96 * 1024   # ~one tvc GOP
+PASSES = 4                 # repeated-access factor
+SERVER_LATENCY = 0.002     # injected per-request mean, seconds
+MIN_SPEEDUP = 2.0
+
+
+def _objects(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [
+        (f"v/{i}/0.tvc", rng.integers(0, 256, OBJECT_BYTES,
+                                      dtype=np.uint8).tobytes())
+        for i in range(n)
+    ]
+
+
+def run(scale: float = 1.0) -> list:
+    n = max(6, int(24 * scale))
+    items = _objects(n)
+    keys = [k for k, _ in items]
+    rows: list = []
+    root = tempfile.mkdtemp(prefix="vssbench26_")
+
+    store = FaultInjectingBackend(
+        LocalFSBackend(root), seed=0, latency=SERVER_LATENCY
+    )
+    server = ObjectServer(store)
+    try:
+        seed_rb = RemoteBackend(server.url, connections=4)
+        seed_rb.batch_put(items)
+        seed_rb.close()
+
+        # -- repeated-access reads: cold vs write-back cache ---------------
+        cold = RemoteBackend(server.url, connections=4)
+        with timer() as t_cold:
+            for _ in range(PASSES):
+                got = cold.batch_get(keys)
+        assert [len(g) for g in got] == [OBJECT_BYTES] * n
+        cold.close()
+        rows.append(Row("fig26", "remote_cold_read", t_cold[0], "s",
+                        f"{PASSES}x{n} objects, every pass on the wire"))
+
+        cached = TieredBackend(
+            RemoteBackend(server.url, connections=4), write_back=True,
+        )
+        with timer() as t_cached:
+            for _ in range(PASSES):
+                got = cached.batch_get(keys)
+        assert [len(g) for g in got] == [OBJECT_BYTES] * n
+        cached.close()
+        rows.append(Row("fig26", "tiered_remote_read", t_cached[0], "s",
+                        "pass 1 promotes, later passes hit the cache"))
+        speedup = t_cold[0] / max(t_cached[0], 1e-9)
+        rows.append(Row("fig26", "writeback_read_speedup", speedup, "x",
+                        f"repeated-access, {PASSES} passes"))
+        assert speedup >= MIN_SPEEDUP, (
+            f"write-back cache must beat cold remote reads by"
+            f" >={MIN_SPEEDUP}x on repeated access, got {speedup:.2f}x"
+        )
+
+        # -- ingest: write-back vs write-through ---------------------------
+        wt = RemoteBackend(server.url, connections=4)
+        wt_items = _objects(n, seed=1)
+        with timer() as t_wt:
+            wt.batch_put(wt_items)
+        wt.close()
+        rows.append(Row("fig26", "remote_write_through", t_wt[0], "s",
+                        f"{n} objects, durable on return"))
+        wb = TieredBackend(RemoteBackend(server.url, connections=4),
+                           write_back=True)
+        wb_items = _objects(n, seed=2)
+        with timer() as t_wb:
+            wb.batch_put(wb_items)
+        rows.append(Row("fig26", "writeback_put", t_wb[0], "s",
+                        "hot admit; upload deferred"))
+        with timer() as t_flush:
+            wb.flush()
+        rows.append(Row("fig26", "writeback_flush", t_flush[0], "s",
+                        "the deferred durability bill"))
+        assert t_wb[0] < t_wt[0], \
+            "write-back puts must return faster than write-through"
+        for key, data in wb_items[:3]:  # spot-check the flush landed
+            assert store.inner.get(key) == data
+        wb.close()
+    finally:
+        server.close()
+        shutil.rmtree(root, ignore_errors=True)
+
+    # -- retry overhead under transient 5xx --------------------------------
+    flaky_store = FaultInjectingBackend(MemoryBackend(), seed=1,
+                                        error_rate=0.15)
+    flaky_srv = ObjectServer(flaky_store)
+    try:
+        rb = RemoteBackend(flaky_srv.url, connections=4,
+                           backoff_base=0.005)
+        rb.batch_put(items)
+        with timer() as t_flaky:
+            got = rb.batch_get(keys)
+        assert [len(g) for g in got] == [OBJECT_BYTES] * n
+        rows.append(Row("fig26", "flaky_remote_read",
+                        t_flaky[0] / n, "s/read",
+                        f"15% injected 5xx, {rb.retries} retries"))
+        rb.close()
+    finally:
+        flaky_srv.close()
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer objects, same asserts")
+    ap.add_argument("--scale", type=float, default=None)
+    args = ap.parse_args()
+    scale = args.scale if args.scale is not None else (
+        0.5 if args.quick else 1.0
+    )
+    print("bench,name,value,unit,notes")
+    for row in run(scale):
+        print(row.csv())

@@ -34,6 +34,7 @@ MODULES = (
     "fig23_batch_reads",
     "fig24_ingest_pipeline",
     "fig25_replication",
+    "fig26_remote",
     "table2_joint_quality",
     "roofline",
 )

@@ -102,6 +102,12 @@ DEFAULT_IO_TABLE: Dict[str, Tuple[float, float]] = {
     # the fallback case (key resolvable on no live replica — a read that
     # will fail or be repaired); charge it like a slow local fetch
     "replicated": (2.4e3, 2e-2),
+    # what `RemoteBackend.kind_for` answers (and `TieredBackend` answers
+    # for a write-back cache MISS): an HTTP round trip per object plus
+    # WAN-ish throughput.  Deliberately pessimistic next to the local
+    # kinds so two otherwise-equal fragments always resolve to the
+    # cached copy; `calibrate_io` replaces it with the measured profile
+    # of the actual server (fig26 is the benchmark-side measurement).
     "remote": (5.0e5, 2e-1),
     "default": (2.0e3, 2e-2),
 }

@@ -92,6 +92,12 @@ def publish_window(backend, catalog, window: PublishWindow) -> None:
     in ONE transaction and the prefix horizon advances.  Used verbatim
     by the pipeline workers and by the blocking writer path."""
     backend.batch_put(window.items)
+    # a write-back tier acknowledges batch_put at hot-admit speed;
+    # source-of-truth ingest must not index rows whose bytes exist only
+    # in a volatile cache — land THIS window's objects first (scoped:
+    # no-op for write-through, and other writers' queued uploads are
+    # not billed to this window's barrier)
+    backend.ensure_durable([key for key, _data in window.items])
     tick = catalog.lru_clock()
     catalog.add_gops(
         [(pid, idx, start, nframes, nbytes, key, tick)

@@ -234,6 +234,11 @@ class VSS:
             # hot-tier spill ordering = the catalog's LRU_VSS sequence
             # numbers; policy stays in cache.py / the catalog
             backend.set_priority_fn(self.catalog.lru_for_paths)
+        # scarce-connection backends (RemoteBackend's socket pool) grow
+        # to cover the ingest worker pool — at least one connection per
+        # concurrently-publishing worker; a minimum hint, so it never
+        # shrinks a pool sized larger for read fan-out
+        backend.configure_concurrency(max(1, int(ingest_workers)))
         # layout guard: the scavenger treats unresolvable keys as lost
         # data, so opening an existing store under a different placement
         # scheme must fail loudly instead of wiping the catalog
@@ -1132,12 +1137,17 @@ class VSS:
         which `VSS` loads on every later startup; stores without the
         file keep using `DEFAULT_IO_TABLE`.  ``backends`` maps extra
         {kind: backend} pairs to measure (e.g. a candidate remote
-        store); the store's own backend is measured under its KIND."""
+        store); the store's own backend contributes its
+        ``calibration_targets()`` — the tier a cache miss would pay
+        for, so a ``tiered:remote`` store calibrates the remote
+        profile rather than filing measurements under a wrapper
+        kind."""
         from repro.core import cost as _cost
 
         if backends is None:
             backends = {}
-        backends.setdefault(self.backend.KIND, self.backend)
+        for kind, b in self.backend.calibration_targets().items():
+            backends.setdefault(kind, b)
         table = _cost.calibrate_io(backends, **kw)
         self.cost_model.io_table.update(table)
         if save:

@@ -24,6 +24,16 @@ Backends
     children (consistent-hash placement); reads fall back across
     replicas, the scrubber (`scrub`) re-replicates what a lost child
     or torn copy left under-replicated.
+  * `RemoteBackend` — HTTP object store (the bundled
+    `repro.storage.httpserver.ObjectServer`, or any server speaking
+    the same PUT/GET/HEAD/DELETE + list + rename protocol): pooled
+    connections, bounded exponential-backoff retries, idempotency-safe
+    temp-key puts.  ``tiered:remote`` fronts it with a **write-back**
+    cache (dirty objects flush before eviction; `flush`/`close` is the
+    durability barrier).
+  * `FaultInjectingBackend` — seeded chaos wrapper (latency, transient
+    errors, torn writes, hang-then-recover) for any of the above; the
+    shared test infrastructure behind the conformance/chaos suites.
 
 Selection: ``VSS(root, backend=...)`` accepts an instance or a spec
 string; with neither, the ``VSS_STORAGE_BACKEND`` env var (default
@@ -31,7 +41,7 @@ string; with neither, the ``VSS_STORAGE_BACKEND`` env var (default
 
 Spec grammar (see `make_backend`):
     local | local:fsync | memory | sharded:<N> | tiered[:<cold spec>]
-    | replicated[:<N>[:<R>[:<W>]]]
+    | replicated[:<N>[:<R>[:<W>]]] | remote[:<url>]
 """
 from __future__ import annotations
 
@@ -42,9 +52,12 @@ from repro.storage.base import (
     ScrubReport,
     StorageBackend,
 )
+from repro.storage.faults import FaultInjectingBackend, InjectedFault
+from repro.storage.httpserver import ObjectServer
 from repro.storage.localfs import LocalFSBackend
 from repro.storage.memory import MemoryBackend
 from repro.storage.recovery import scavenge, scrub, validate_gop_bytes
+from repro.storage.remote import RemoteBackend, RemoteError
 from repro.storage.replicated import (
     ChildDownError,
     ReplicatedBackend,
@@ -67,10 +80,16 @@ def make_backend(spec: str, root: str) -> StorageBackend:
         sharded:<N>              N LocalFS volumes under <root>/vol*
         tiered                   memory hot tier over local
         tiered:<spec>            memory hot tier over any cold spec
+                                 (write-back when the cold tier is
+                                 remote, write-through otherwise)
         replicated               3 LocalFS children, R=3 replicas, W=2
         replicated:<N>:<R>:<W>   N children under <root>/replica*,
                                  R = min(3, N) and W = majority(R)
                                  unless given
+        remote                   self-hosted loopback ObjectServer
+                                 over <root> (tests/CI: a real HTTP
+                                 hop with zero external setup)
+        remote:<url>             external object server at <url>
     """
     spec = (spec or DEFAULT_SPEC).strip().lower()
     head, _, rest = spec.partition(":")
@@ -81,8 +100,18 @@ def make_backend(spec: str, root: str) -> StorageBackend:
     if head == "sharded":
         n = int(rest) if rest else 2
         return ShardedBackend.local(root, n)
+    if head == "remote":
+        if rest:
+            return RemoteBackend(rest)
+        return RemoteBackend.self_hosted(root)
     if head == "tiered":
-        return TieredBackend(make_backend(rest or DEFAULT_SPEC, root))
+        cold = make_backend(rest or DEFAULT_SPEC, root)
+        # a remote cold tier gets the write-back composition (ISSUE:
+        # fast local cache over a slow object store); every other cold
+        # tier keeps the durable write-through discipline
+        return TieredBackend(
+            cold, write_back=isinstance(cold, RemoteBackend)
+        )
     if head == "replicated":
         parts = [int(p) for p in rest.split(":") if p] if rest else []
         if len(parts) > 3:
@@ -100,12 +129,17 @@ __all__ = [
     "ENV_VAR",
     "DEFAULT_SPEC",
     "ChildDownError",
+    "FaultInjectingBackend",
     "HashRing",
+    "InjectedFault",
     "LocalFSBackend",
     "MemoryBackend",
     "ObjectNotFound",
+    "ObjectServer",
     "ObjectStat",
     "RecoveryReport",
+    "RemoteBackend",
+    "RemoteError",
     "ReplicatedBackend",
     "ReplicationError",
     "ScrubReport",

@@ -32,11 +32,21 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 class ObjectNotFound(KeyError):
     """Raised by ``get``/``stat``/``batch_get`` for an unknown key."""
+
+
+def validate_key(key: str) -> str:
+    """Reject keys that could escape a backend's namespace (absolute
+    paths, ``..`` traversal).  The ONE copy of this security filter —
+    filesystem-backed backends and the remote client both route
+    through it, so a future tightening cannot drift between them."""
+    if key.startswith(("/", "\\")) or ".." in key.split("/"):
+        raise ValueError(f"bad storage key {key!r}")
+    return key
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +114,34 @@ class StorageBackend(abc.ABC):
         """Remove in-flight temp artifacts left by a crash; returns the
         number removed.  No-op for backends without a temp protocol."""
         return 0
+
+    def configure_concurrency(self, n: int) -> None:
+        """Hint: at least ``n`` threads will drive this backend at
+        once (`VSS` passes ``ingest_workers``).  Backends holding
+        scarce per-connection resources (`RemoteBackend`'s socket
+        pool) GROW themselves to cover it — never shrink, so the hint
+        cannot clobber a larger explicitly-configured pool or the
+        read-side fan-out default; wrappers forward it to their
+        children."""
+
+    def ensure_durable(self, keys: Optional[Sequence[str]] = None) -> None:
+        """Barrier: every previously acknowledged write — scoped to
+        ``keys`` when given — is durable on return.  A no-op for
+        write-through backends (their ``put`` IS the barrier); a
+        write-back `TieredBackend` lands the scoped dirty objects.
+        The ingest path calls this with each window's keys between the
+        window's ``batch_put`` and its catalog commit, so
+        publish-then-index stays exact even over a deferring cache —
+        indexed rows never reference bytes that exist only in a
+        volatile tier."""
+
+    def calibration_targets(self) -> Dict[str, "StorageBackend"]:
+        """The ``{kind: backend}`` pairs ``calibrate_io`` should time
+        to price THIS backend's fetches.  Wrappers answer with the
+        tier that serves a cache miss (`TieredBackend` -> its cold
+        child), so a ``tiered:remote`` store calibrates the remote
+        profile instead of filing measurements under a wrapper kind."""
+        return {self.KIND: self}
 
     def layout_fingerprint(self) -> str:
         """Identifies the *key→object placement scheme*, not the

@@ -1,0 +1,280 @@
+"""Bundled HTTP object server — the wire side of `RemoteBackend`.
+
+A minimal object protocol over plain HTTP/1.1, small enough that the
+stdlib `http.server` machinery serves it and any S3/GCS-shaped store
+could re-implement it:
+
+    PUT    /o/<key>                store the request body under <key>
+    GET    /o/<key>                full object; honours ``Range:
+                                   bytes=a-b`` with a 206 partial
+                                   response (partial GOP reads)
+    HEAD   /o/<key>                existence + Content-Length, no body
+    DELETE /o/<key>                idempotent delete (204 either way)
+    GET    /list?prefix=<p>        newline-separated keys under <p>
+    POST   /rename?src=<a>&dst=<b> server-side atomic commit: move the
+                                   object at <a> to <b> (404 if <a> is
+                                   missing)
+
+Keys are URL-quoted path segments (``/`` survives).  Storage-level
+misses answer 404, anything else a backend raises answers 500 — which
+is exactly what `RemoteBackend`'s retry loop keys off, so server-side
+fault injection is just wrapping the backing store in a
+`FaultInjectingBackend`.
+
+``/rename`` exists for the client's idempotency-safe put protocol:
+uploads land under a unique temp key and commit with one rename, so a
+retried upload never tears a live object and a crash between upload
+and commit leaves only a temp turd for `RemoteBackend.sweep_temps`.
+The handler serializes renames per destination key; the move itself is
+get+put+delete on the backing store, whose atomic per-object ``put``
+keeps readers of the destination on complete bytes.
+
+The server composes over any `StorageBackend` (default: a
+`LocalFSBackend` under ``--root``), which is also how `make_backend`'s
+plain ``remote`` spec self-hosts a loopback instance per store.
+Standalone (for benchmarks against a real network hop):
+
+    python -m repro.storage.httpserver --root /data/objects --port 8080
+"""
+from __future__ import annotations
+
+import re
+import threading
+import urllib.parse
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.storage.base import ObjectNotFound, StorageBackend
+
+_RANGE_RE = re.compile(r"bytes=(\d+)-(\d*)$")
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    server_version = "vss-object-server/1"
+
+    # the ThreadingHTTPServer subclass carries the backing store
+    @property
+    def store(self) -> StorageBackend:
+        return self.server.store  # type: ignore[attr-defined]
+
+    def log_message(self, fmt, *args):  # pragma: no cover - silence
+        pass
+
+    # -- helpers -----------------------------------------------------------
+    def _key(self) -> Optional[str]:
+        path = urllib.parse.urlsplit(self.path).path
+        if not path.startswith("/o/"):
+            # the request may carry an unread body (PUT): drop the
+            # connection rather than desync the keep-alive stream
+            self._respond(400, b"bad path", close=True)
+            return None
+        return urllib.parse.unquote(path[len("/o/"):])
+
+    def _query(self) -> dict:
+        q = urllib.parse.urlsplit(self.path).query
+        return {k: v[0] for k, v in urllib.parse.parse_qs(q).items()}
+
+    def _respond(self, status: int, body: bytes = b"",
+                 length: Optional[int] = None,
+                 extra: Optional[dict] = None, close: bool = False):
+        """``length`` declares a Content-Length with no body (HEAD).
+        ``close`` drops the keep-alive connection after the response —
+        required whenever we answer BEFORE consuming a request body
+        (the unread bytes would otherwise be parsed as the next
+        request line, desyncing every later exchange on the socket)."""
+        if close:
+            self.close_connection = True
+        self.send_response(status)
+        if close:
+            self.send_header("Connection", "close")
+        for k, v in (extra or {}).items():
+            self.send_header(k, v)
+        self.send_header(
+            "Content-Length", str(len(body) if length is None else length)
+        )
+        self.end_headers()
+        # a HEAD response never carries a body (whatever Content-Length
+        # declares) — writing one would desync the keep-alive stream
+        if body and length is None and self.command != "HEAD":
+            self.wfile.write(body)
+
+    def _guard(self, fn, *args, missing_status: int = 404):
+        """Run a store operation; map a miss to 404 and any other
+        backend failure to 500 (the client's retryable class)."""
+        try:
+            return True, fn(*args)
+        except ObjectNotFound as exc:
+            self._respond(missing_status, str(exc).encode())
+        except Exception as exc:  # noqa: BLE001 - wire boundary
+            self._respond(500, f"{type(exc).__name__}: {exc}".encode())
+        return False, None
+
+    # -- verbs -------------------------------------------------------------
+    def do_GET(self):
+        path = urllib.parse.urlsplit(self.path).path
+        if path == "/list":
+            prefix = self._query().get("prefix", "")
+            ok, keys = self._guard(self.store.list, prefix)
+            if ok:
+                self._respond(200, "\n".join(sorted(keys)).encode())
+            return
+        key = self._key()
+        if key is None:
+            return
+        ok, data = self._guard(self.store.get, key)
+        if not ok:
+            return
+        rng = self.headers.get("Range")
+        if rng:
+            m = _RANGE_RE.match(rng.strip())
+            if not m or int(m.group(1)) >= len(data):
+                self._respond(416, b"", extra={
+                    "Content-Range": f"bytes */{len(data)}"
+                })
+                return
+            a = int(m.group(1))
+            b = int(m.group(2)) + 1 if m.group(2) else len(data)
+            b = min(b, len(data))
+            self._respond(206, data[a:b], extra={
+                "Content-Range": f"bytes {a}-{b - 1}/{len(data)}"
+            })
+            return
+        self._respond(200, data)
+
+    def do_HEAD(self):
+        key = self._key()
+        if key is None:
+            return
+        ok, st = self._guard(self.store.stat, key)
+        if ok:
+            self._respond(200, length=st.nbytes)
+
+    def do_PUT(self):
+        key = self._key()
+        if key is None:
+            return
+        length = self.headers.get("Content-Length")
+        if length is None:
+            # unread (possibly chunked) body: close, don't desync
+            self._respond(411, b"length required", close=True)
+            return
+        try:
+            data = self.rfile.read(int(length))
+            if len(data) != int(length):
+                raise ConnectionError("short read")
+        except Exception:
+            # a client that died mid-upload: nothing reaches the store
+            self._respond(400, b"truncated upload", close=True)
+            return
+        ok, _ = self._guard(self.store.put, key, data)
+        if ok:
+            self._respond(204)
+
+    def do_DELETE(self):
+        key = self._key()
+        if key is None:
+            return
+        ok, _ = self._guard(self.store.delete, key)
+        if ok:
+            self._respond(204)
+
+    def do_POST(self):
+        path = urllib.parse.urlsplit(self.path).path
+        if path != "/rename":
+            self._respond(400, b"bad path", close=True)
+            return
+        q = self._query()  # parse_qs already URL-decoded the values
+        src, dst = q.get("src"), q.get("dst")
+        if not src or not dst:
+            self._respond(400, b"rename needs src and dst")
+            return
+        lock = self.server.rename_lock(dst)  # type: ignore[attr-defined]
+        with lock:
+            ok, data = self._guard(self.store.get, src)
+            if not ok:
+                return
+            ok, _ = self._guard(self.store.put, dst, data)
+            if not ok:
+                return
+            ok, _ = self._guard(self.store.delete, src)
+            if ok:
+                self._respond(204)
+
+
+class _Server(ThreadingHTTPServer):
+    daemon_threads = True
+    allow_reuse_address = True
+
+    def __init__(self, addr, store: StorageBackend):
+        super().__init__(addr, _Handler)
+        self.store = store
+        self._rename_locks: dict = {}
+        self._rename_locks_guard = threading.Lock()
+
+    def rename_lock(self, dst: str) -> threading.Lock:
+        with self._rename_locks_guard:
+            if len(self._rename_locks) > 4096:
+                # bound the map, but never discard a HELD lock — a
+                # slow rename still inside it would lose its per-dst
+                # serialization and could resurrect stale bytes
+                self._rename_locks = {
+                    k: lk for k, lk in self._rename_locks.items()
+                    if lk.locked()
+                }
+            return self._rename_locks.setdefault(dst, threading.Lock())
+
+
+class ObjectServer:
+    """A running object server over a `StorageBackend`.
+
+    Binds ``host:port`` (port 0 picks an ephemeral port) and serves on
+    a daemon thread; ``url`` is what `RemoteBackend` connects to.  The
+    backing store is shared state — the server never copies it — so a
+    test can reach behind the wire (tear an object, count ops, inject
+    faults via `FaultInjectingBackend`) while the client speaks HTTP.
+    """
+
+    def __init__(self, store: StorageBackend, *, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.store = store
+        self._httpd = _Server((host, port), store)
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, daemon=True,
+            name="vss-object-server",
+        )
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        host, port = self._httpd.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._thread.join(timeout=5.0)
+        self._httpd.server_close()
+
+
+def main(argv=None) -> None:  # pragma: no cover - operational entry point
+    import argparse
+
+    from repro.storage.localfs import LocalFSBackend
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", required=True,
+                    help="directory for the backing LocalFSBackend")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    args = ap.parse_args(argv)
+    server = ObjectServer(LocalFSBackend(args.root),
+                          host=args.host, port=args.port)
+    print(f"serving {args.root} at {server.url}", flush=True)
+    try:
+        threading.Event().wait()
+    except KeyboardInterrupt:
+        server.close()
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

@@ -14,7 +14,12 @@ import os
 import threading
 from typing import List
 
-from repro.storage.base import ObjectNotFound, ObjectStat, StorageBackend
+from repro.storage.base import (
+    ObjectNotFound,
+    ObjectStat,
+    StorageBackend,
+    validate_key,
+)
 
 TEMP_MARKER = ".tmp-"
 
@@ -31,9 +36,7 @@ class LocalFSBackend(StorageBackend):
 
     # -- key ↔ path --------------------------------------------------------
     def _path(self, key: str) -> str:
-        if key.startswith(("/", "\\")) or ".." in key.split("/"):
-            raise ValueError(f"bad storage key {key!r}")
-        return os.path.join(self.root, *key.split("/"))
+        return os.path.join(self.root, *validate_key(key).split("/"))
 
     def _key(self, path: str) -> str:
         return os.path.relpath(path, self.root).replace(os.sep, "/")

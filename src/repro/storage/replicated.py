@@ -553,6 +553,10 @@ class ReplicatedBackend(StorageBackend):
         return n
 
     # -- maintenance -------------------------------------------------------
+    def configure_concurrency(self, n: int) -> None:
+        for c in self.children:
+            c.configure_concurrency(n)
+
     def sweep_temps(self) -> int:
         removed = 0
         for ci in self.live_children():

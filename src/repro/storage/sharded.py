@@ -166,6 +166,10 @@ class ShardedBackend(StorageBackend):
     def sweep_temps(self) -> int:
         return sum(v.sweep_temps() for v in self.volumes)
 
+    def configure_concurrency(self, n: int) -> None:
+        for v in self.volumes:
+            v.configure_concurrency(n)
+
     def layout_fingerprint(self) -> str:
         # the ring (hence placement) is a pure function of volume count
         return f"sharded:{len(self.volumes)}"

@@ -1,6 +1,7 @@
 """Pipelined ingest: queue semantics, multi-stream concurrency, error
 propagation, durability barriers, and crash-mid-queue recovery."""
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -8,6 +9,18 @@ import pytest
 from repro.core.spec import WriteSpec
 from repro.core.store import VSS
 from repro.storage import MemoryBackend
+
+
+def _wait_until(pred, timeout=30.0, what="condition"):
+    """Poll a state predicate to a deadline — the synchronization
+    primitive for 'the other thread has provably reached state X'.
+    Tests must never assert on a fixed sleep's worth of progress (a
+    loaded CI runner makes that a coin flip); they wait for the state
+    itself and only then assert."""
+    deadline = time.monotonic() + timeout
+    while not pred():
+        assert time.monotonic() < deadline, f"timed out awaiting {what}"
+        time.sleep(0.005)
 
 
 def _writer(vss, name, *, codec="rgb", gop_frames=15, batch_gops=1,
@@ -95,8 +108,15 @@ def test_backpressure_bounds_the_queue(tmp_path, clip):
 
         t = threading.Thread(target=feed, daemon=True)
         t.start()
-        # with workers paused the second submit must block on the bound
-        assert not fed.wait(1.0)
+        # with workers paused the second submit must block on the
+        # bound: wait for the *provable* blocked state (the pipeline
+        # counts the wait before sleeping on it), not a wall-clock
+        # guess about how far the feeder got
+        _wait_until(
+            lambda: vss.ingest.stats().backpressure_waits >= 1,
+            what="the feeder to block on the queue bound",
+        )
+        assert not fed.is_set()
         vss.ingest.resume()
         assert fed.wait(30.0)
         t.join(timeout=30.0)
@@ -139,8 +159,11 @@ def test_barrier_waits_on_snapshot_not_live_writer(tmp_path, clip):
         def __init__(self):
             super().__init__()
             self.gate = threading.Semaphore(0)
+            self.arrivals = 0  # windows that reached the backend
 
         def batch_put(self, items):
+            with self._lock:
+                self.arrivals += 1
             self.gate.acquire()  # one permit per window
             super().batch_put(items)
 
@@ -156,7 +179,12 @@ def test_barrier_waits_on_snapshot_not_live_writer(tmp_path, clip):
             daemon=True,
         )
         t.start()
-        assert not done.wait(0.3)  # nothing settled yet
+        # deterministic "barrier is really waiting" check: once the
+        # worker is provably parked on the gate, window 1 cannot have
+        # settled — so the barrier cannot have returned
+        _wait_until(lambda: backend.arrivals >= 1,
+                    what="the worker to park on the gate")
+        assert not done.is_set()   # nothing settled yet
         w.append(clip[30:])        # windows 3+4 arrive AFTER the barrier
         backend.gate.release()
         backend.gate.release()     # settle exactly windows 1+2

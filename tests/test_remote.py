@@ -1,0 +1,451 @@
+"""`RemoteBackend` + the bundled object server: wire protocol, retry
+policy, the idempotency-safe temp-key put, and crash recovery.
+
+Contract-level conformance (roundtrips, batches, atomicity, listing)
+runs in test_storage.py's `TestBackendConformance` matrix; chaos-level
+behaviour (retry exhaustion, torn writes, hangs) in test_faults.py.
+This file covers what is specific to the HTTP seam."""
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.storage import (
+    LocalFSBackend,
+    MemoryBackend,
+    ObjectNotFound,
+    ObjectServer,
+    RemoteBackend,
+    TieredBackend,
+)
+from repro.storage.remote import TEMP_PREFIX, _Response
+
+
+@pytest.fixture()
+def served(tmp_path):
+    """(server, backend) over a LocalFS store the test can reach
+    behind the wire."""
+    store = LocalFSBackend(str(tmp_path / "objects"))
+    server = ObjectServer(store)
+    rb = RemoteBackend(server.url, backoff_base=0.01)
+    yield server, rb, store
+    rb.close()
+    server.close()
+
+
+# ---------------------------------------------------------------------------
+# wire protocol
+# ---------------------------------------------------------------------------
+
+def test_ranged_get_partial_object(served):
+    _server, rb, _store = served
+    rb.put("v/1/0.tvc", b"0123456789" * 10)
+    assert rb.get_range("v/1/0.tvc", 0, 4) == b"0123"
+    assert rb.get_range("v/1/0.tvc", 95, 5) == b"56789"
+    assert rb.get_range("v/1/0.tvc", 10, 1000) == b"0123456789" * 9
+    with pytest.raises(ObjectNotFound):
+        rb.get_range("missing", 0, 4)
+    with pytest.raises(ValueError):
+        rb.get_range("v/1/0.tvc", 100, 4)  # start past the end
+    with pytest.raises(ValueError):
+        rb.get_range("v/1/0.tvc", -1, 4)
+
+
+def test_ranged_get_slices_when_server_ignores_range(served):
+    """An external server without Range support answers 200 + full
+    body; the client must slice rather than hand back the whole
+    object as if it were the requested window."""
+    server, _rb, _store = served
+
+    class NoRangeServer(RemoteBackend):
+        def _request(self, method, path, body=None, headers=None):
+            headers = {k: v for k, v in (headers or {}).items()
+                       if k != "Range"}
+            return super()._request(method, path, body=body,
+                                    headers=headers)
+
+    rb = NoRangeServer(server.url, backoff_base=0.01)
+    try:
+        rb.put("k", b"0123456789" * 10)
+        assert rb.get_range("k", 6, 5) == b"67890"
+        assert rb.get_range("k", 95, 100) == b"56789"
+        with pytest.raises(ValueError):
+            rb.get_range("k", 100, 4)
+    finally:
+        rb.close()
+
+
+def test_server_speaks_plain_http(served):
+    """Any HTTP client can read the store — the protocol is the
+    commodity S3-shaped surface, not a private RPC."""
+    server, rb, _store = served
+    rb.put("plain/key.bin", b"wire-visible")
+    with urllib.request.urlopen(f"{server.url}/o/plain/key.bin") as resp:
+        assert resp.status == 200
+        assert resp.read() == b"wire-visible"
+    req = urllib.request.Request(
+        f"{server.url}/o/plain/key.bin", headers={"Range": "bytes=5-11"}
+    )
+    with urllib.request.urlopen(req) as resp:
+        assert resp.status == 206
+        assert resp.read() == b"visible"
+
+
+def test_keys_with_url_hostile_characters(served):
+    _server, rb, _store = served
+    # the %41 key is the double-decoding canary: a server that
+    # URL-decodes twice would commit it as "v 1/aAb..." instead
+    for key in ("v 1/ob+j&ect=#0.tvc", "v 1/a%41b?x=1.tvc"):
+        rb.put(key, b"quoted")
+        assert rb.get(key) == b"quoted"
+        assert rb.stat(key).nbytes == 6
+        assert key in rb.list("v 1/")
+    assert sorted(rb.list("v 1/")) == sorted(
+        ["v 1/ob+j&ect=#0.tvc", "v 1/a%41b?x=1.tvc"]
+    )
+    for key in ("v 1/ob+j&ect=#0.tvc", "v 1/a%41b?x=1.tvc"):
+        rb.delete(key)
+        assert not rb.exists(key)
+
+
+def test_remote_rejects_escaping_keys(served):
+    _server, rb, _store = served
+    for bad in ("/abs", "../escape", "a/../../b"):
+        with pytest.raises(ValueError):
+            rb.put(bad, b"x")
+
+
+def test_missing_key_is_miss_not_retry(served):
+    """4xx answers are protocol, not weather: a plain miss must not
+    burn the retry budget (or its backoff time)."""
+    _server, rb, _store = served
+    with pytest.raises(ObjectNotFound):
+        rb.get("nope")
+    with pytest.raises(ObjectNotFound):
+        rb.stat("nope")
+    assert rb.retries == 0
+
+
+# ---------------------------------------------------------------------------
+# idempotency-safe put (temp key + server-side rename)
+# ---------------------------------------------------------------------------
+
+def test_put_goes_through_temp_key_and_commit(served):
+    """Uploads land under the reserved temp prefix and only the rename
+    publishes — mid-upload state is invisible to readers and lists."""
+    _server, rb, store = served
+    rb.put("v/1/0.tvc", b"committed")
+    # nothing left under the temp prefix after a successful put
+    assert [k for k in store.list() if k.startswith(TEMP_PREFIX)] == []
+    assert store.get("v/1/0.tvc") == b"committed"
+
+
+def test_crashed_upload_leaves_temp_swept_at_recovery(served):
+    """A client that died between upload and commit: the destination
+    key is untouched, the turd is swept by startup recovery."""
+    _server, rb, store = served
+    rb.put("v/1/0.tvc", b"live")
+    # simulate the crash: the upload half of put(), no rename
+    rb._request("PUT", rb._opath(f"{TEMP_PREFIX}deadbeef-1-0"),
+                body=b"never committed")
+    assert rb.get("v/1/0.tvc") == b"live"
+    assert all(not k.startswith(TEMP_PREFIX) for k in rb.list())
+    assert rb.sweep_temps() == 1
+    assert [k for k in store.list() if k.startswith(TEMP_PREFIX)] == []
+    assert rb.get("v/1/0.tvc") == b"live"  # live keys untouched
+
+
+def test_rename_retry_after_lost_ack_is_accepted(tmp_path):
+    """The commit's 204 lost in transit: the retried rename sees 404
+    (source already consumed) and must reconcile via the destination —
+    exactly the committed bytes means the put succeeded."""
+    store = MemoryBackend()
+    server = ObjectServer(store)
+
+    class LossyAck(RemoteBackend):
+        def __init__(self, url):
+            super().__init__(url, backoff_base=0.01)
+            self.dropped = 0
+
+        def _request(self, method, path, body=None, headers=None):
+            r = super()._request(method, path, body=body, headers=headers)
+            if method == "POST" and self.dropped == 0 and r.status == 204:
+                # the rename happened server-side; the ack evaporates
+                # and the client's retry loop re-POSTs, reaching the
+                # 404-reconcile branch in put()
+                self.dropped += 1
+                return super()._request(method, path)
+            return r
+
+    rb = LossyAck(server.url)
+    try:
+        rb.put("k", b"exactly-once")
+        assert rb.dropped == 1
+        assert store.get("k") == b"exactly-once"
+        assert [k for k in store.list() if k.startswith(TEMP_PREFIX)] == []
+    finally:
+        rb.close()
+        server.close()
+
+
+def test_rename_missing_source_without_committed_dst_fails(tmp_path):
+    """404 on a FIRST rename (nothing committed) must surface as a
+    failure, not be mistaken for a lost ack."""
+    store = MemoryBackend()
+    server = ObjectServer(store)
+
+    class EatUpload(RemoteBackend):
+        def _request(self, method, path, body=None, headers=None):
+            if method == "POST":
+                # pretend someone swept our temp key mid-put
+                return _Response(404, b"no src", None)
+            return super()._request(method, path, body=body,
+                                    headers=headers)
+
+    rb = EatUpload(server.url, backoff_base=0.01)
+    try:
+        with pytest.raises(IOError, match="rename commit lost"):
+            rb.put("k", b"x")
+        assert not store.exists("k")
+    finally:
+        rb.close()
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# connection pool sizing
+# ---------------------------------------------------------------------------
+
+def test_configure_concurrency_grows_but_never_shrinks(served):
+    _server, rb, _store = served
+    rb.configure_concurrency(9)
+    assert rb._connections == 9
+    keys = [f"k{i}" for i in range(30)]
+    rb.batch_put([(k, k.encode()) for k in keys])
+    assert rb.batch_get(keys) == [k.encode() for k in keys]
+    # a smaller hint must not clamp the pool (two ingest workers must
+    # not serialize the read fan-out)
+    rb.configure_concurrency(2)
+    assert rb._connections == 9
+    assert rb.batch_get(keys[:5]) == [k.encode() for k in keys[:5]]
+
+
+def test_vss_sizes_remote_pool_to_ingest_workers(tmp_path):
+    from repro.core.store import VSS
+
+    vss = VSS(str(tmp_path / "vss"), backend="remote", ingest_workers=7)
+    try:
+        assert isinstance(vss.backend, RemoteBackend)
+        assert vss.backend._connections == 7
+    finally:
+        vss.close()
+    vss2 = VSS(str(tmp_path / "vss2"), backend="tiered:remote",
+               ingest_workers=5)
+    try:
+        assert isinstance(vss2.backend.cold, RemoteBackend)
+        assert vss2.backend.cold._connections == 5  # forwarded by tiered
+    finally:
+        vss2.close()
+
+
+# ---------------------------------------------------------------------------
+# VSS crash recovery over the remote layout
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def short_clip():
+    from repro.data.video import synthesize_road
+
+    return synthesize_road(30, width=128, height=96, seed=3)
+
+
+def test_vss_remote_startup_sweeps_temps_and_orphans(tmp_path, short_clip):
+    """Crash residue on a remote store: an uncommitted temp upload and
+    a published-but-never-indexed object; reopening the store sweeps
+    both and committed GOPs stay readable."""
+    from repro.core.store import VSS
+
+    root = str(tmp_path / "vss")
+    vss = VSS(root, backend="remote")
+    vss.write("v", short_clip, fps=30.0, codec="tvc-med", gop_frames=10)
+    rb = vss.backend
+    rb._request("PUT", rb._opath(f"{TEMP_PREFIX}crashed-upload"),
+                body=b"half")
+    rb.put("v/9/0.tvc", b"published-not-indexed")
+    vss.catalog.close()  # crash: no clean-shutdown marker
+    vss.backend.close()  # the self-hosted server dies with the process
+
+    vss2 = VSS(root, backend="remote")
+    try:
+        assert vss2.recovery.temps_removed == 1
+        assert vss2.recovery.orphans_removed == 1
+        assert vss2.recovery.gops_dropped == 0
+        out = vss2.read("v", codec="rgb", cache=False).frames
+        assert out.shape == short_clip.shape
+    finally:
+        vss2.close()
+
+
+def test_reopen_against_wrong_server_refuses(tmp_path, short_clip):
+    """The layout identity lives ON the server: pointing an existing
+    catalog at a different object server (typo'd URL, wrong migration
+    target) must fail the layout guard loudly — a constant fingerprint
+    would let startup recovery wipe the catalog AND collect the other
+    server's objects as orphans."""
+    from repro.core.store import VSS
+
+    root = str(tmp_path / "vss")
+    vss = VSS(root, backend="remote")
+    vss.write("v", short_clip, fps=30.0, codec="tvc-med", gop_frames=10)
+    vss.catalog.close()  # crash — so the scavenger WOULD run on reopen
+    vss.backend.close()
+
+    other = ObjectServer(MemoryBackend())  # a different, healthy store
+    try:
+        with pytest.raises(ValueError, match="storage layout"):
+            VSS(root, backend=f"remote:{other.url}")
+        # no object data touched on the wrong server — the probe only
+        # minted its (reserved, list-hidden) layout identity
+        assert [k for k in other.store.list()
+                if not k.startswith("_layout/")] == []
+    finally:
+        other.close()
+    vss2 = VSS(root, backend="remote")  # the right server still opens
+    try:
+        assert vss2.read("v", codec="rgb", cache=False).frames.shape \
+            == short_clip.shape
+    finally:
+        vss2.close()
+
+
+def test_error_before_body_read_closes_connection(served):
+    """A PUT the server rejects before consuming its body (no
+    Content-Length) must close the connection — leaving it open would
+    parse the unread body as the next request line and desync every
+    later exchange on the socket."""
+    import socket as socketlib
+
+    server, _rb, _store = served
+    host, port = server.url[len("http://"):].split(":")
+    s = socketlib.create_connection((host, int(port)), timeout=5.0)
+    try:
+        s.sendall(b"PUT /o/k HTTP/1.1\r\nHost: x\r\n"
+                  b"Transfer-Encoding: chunked\r\n\r\n"
+                  b"5\r\nhello\r\n0\r\n\r\n")
+        resp = b""
+        while b"\r\n\r\n" not in resp:
+            chunk = s.recv(4096)
+            if not chunk:
+                break
+            resp += chunk
+        assert b"411" in resp.split(b"\r\n", 1)[0]
+        assert b"Connection: close" in resp
+        # server closes: recv drains to EOF instead of hanging a
+        # desynced keep-alive exchange
+        s.settimeout(5.0)
+        while True:
+            tail = s.recv(4096)
+            if not tail:
+                break
+    finally:
+        s.close()
+
+
+def test_vss_remote_reopens_under_same_layout(tmp_path, short_clip):
+    from repro.core.store import VSS
+
+    root = str(tmp_path / "vss")
+    vss = VSS(root, backend="remote")
+    vss.write("v", short_clip, fps=30.0, codec="tvc-med", gop_frames=10)
+    vss.close()
+    with pytest.raises(ValueError, match="storage layout"):
+        VSS(root, backend="local")
+    # remote and tiered:remote share a layout (the hot tier is
+    # ephemeral), mirroring tiered:local vs local
+    vss2 = VSS(root, backend="tiered:remote")
+    try:
+        assert np.asarray(
+            vss2.read("v", codec="rgb", cache=False).frames
+        ).shape == short_clip.shape
+    finally:
+        vss2.close()
+
+
+def test_calibration_targets_reach_through_the_cache(tmp_path):
+    b = TieredBackend(RemoteBackend.self_hosted(str(tmp_path / "o")),
+                      write_back=True)
+    try:
+        targets = b.calibration_targets()
+        assert list(targets) == ["remote"]
+        assert isinstance(targets["remote"], RemoteBackend)
+    finally:
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# temp-key protocol property test: any interleaving of put/commit/crash
+# recovers to indexed-implies-readable
+# ---------------------------------------------------------------------------
+
+def _drive(server_store, url, script):
+    """Run a put/abandon script against a fresh client, "crash" it
+    (drop the client without cleanup), then recover and check the
+    invariant: every indexed key reads back exactly, every uncommitted
+    upload is swept."""
+    rb = RemoteBackend(url, backoff_base=0.01)
+    indexed = {}
+    for i, (op, slot) in enumerate(script):
+        key = f"v/{slot}/0.tvc"
+        data = f"gen-{i}".encode() * 8
+        if op == "commit":
+            rb.put(key, data)     # durable + committed...
+            indexed[key] = data   # ...then indexed (publish-then-index)
+        else:  # abandon: the crash hits between upload and commit
+            rb._request(
+                "PUT", rb._opath(f"{TEMP_PREFIX}abandon-{i}"), body=data
+            )
+    # crash: no flush, no close-protocol — just a new client recovering
+    rb2 = RemoteBackend(url, backoff_base=0.01)
+    rb2.sweep_temps()
+    for key, data in indexed.items():
+        assert rb2.get(key) == data, "indexed key must read back exactly"
+    assert all(not k.startswith(TEMP_PREFIX) for k in server_store.list())
+    rb.close()
+    rb2.close()
+
+
+try:  # property-based when the wheel is present, seeded sweep otherwise
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.lists(
+        st.tuples(st.sampled_from(["commit", "abandon"]),
+                  st.integers(0, 3)),
+        max_size=12,
+    ))
+    def test_temp_key_protocol_recovers_indexed_implies_readable(
+            script):
+        store = MemoryBackend()
+        server = ObjectServer(store)
+        try:
+            _drive(store, server.url, script)
+        finally:
+            server.close()
+
+except ImportError:  # deterministic sweep fallback (same invariant)
+    def test_temp_key_protocol_recovers_indexed_implies_readable():
+        import random
+
+        for seed in range(6):
+            rng = random.Random(seed)
+            script = [
+                (rng.choice(["commit", "abandon"]), rng.randrange(4))
+                for _ in range(rng.randrange(1, 12))
+            ]
+            store = MemoryBackend()
+            server = ObjectServer(store)
+            try:
+                _drive(store, server.url, script)
+            finally:
+                server.close()

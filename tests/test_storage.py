@@ -1,13 +1,16 @@
 """`repro.storage`: backend conformance, sharding, tiering, recovery."""
 import os
+import threading
 
 import numpy as np
 import pytest
 
 from repro.storage import (
+    FaultInjectingBackend,
     LocalFSBackend,
     MemoryBackend,
     ObjectNotFound,
+    RemoteBackend,
     ReplicatedBackend,
     ShardedBackend,
     TieredBackend,
@@ -15,8 +18,12 @@ from repro.storage import (
 )
 from repro.storage.localfs import TEMP_MARKER
 
+# every backend configuration runs the identical conformance suite —
+# including the remote client against a live loopback object server and
+# a (quiet) fault wrapper proving the chaos shim preserves the contract
 BACKEND_SPECS = ("memory", "local", "local:fsync", "sharded2", "sharded4",
-                 "tiered", "replicated3", "replicated4r3")
+                 "tiered", "replicated3", "replicated4r3", "remote",
+                 "tiered_remote", "fault_wrapped")
 
 
 def _make(spec, root):
@@ -36,6 +43,12 @@ def _make(spec, root):
         return ReplicatedBackend.local(root, 3)
     if spec == "replicated4r3":
         return ReplicatedBackend.local(root, 4, replicas=3, write_quorum=2)
+    if spec == "remote":
+        return RemoteBackend.self_hosted(root, backoff_base=0.01)
+    if spec == "tiered_remote":
+        return make_backend("tiered:remote", root)
+    if spec == "fault_wrapped":
+        return FaultInjectingBackend(MemoryBackend(), seed=0)
     raise AssertionError(spec)
 
 
@@ -47,68 +60,125 @@ def backend(request, tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# conformance suite — every backend, same contract
+# conformance suite — every backend, same contract (one class, fixture-
+# driven; chaos tests in test_faults.py build on the same guarantees)
 # ---------------------------------------------------------------------------
 
-def test_put_get_roundtrip(backend):
-    backend.put("v/1/0.tvc", b"alpha")
-    assert backend.get("v/1/0.tvc") == b"alpha"
-    backend.put("v/1/0.tvc", b"beta")  # overwrite
-    assert backend.get("v/1/0.tvc") == b"beta"
+class TestBackendConformance:
+    def test_put_get_roundtrip(self, backend):
+        backend.put("v/1/0.tvc", b"alpha")
+        assert backend.get("v/1/0.tvc") == b"alpha"
+        backend.put("v/1/0.tvc", b"beta")  # overwrite
+        assert backend.get("v/1/0.tvc") == b"beta"
 
+    def test_missing_key_raises(self, backend):
+        with pytest.raises(ObjectNotFound):
+            backend.get("nope")
+        with pytest.raises(ObjectNotFound):
+            backend.stat("nope")
 
-def test_missing_key_raises(backend):
-    with pytest.raises(ObjectNotFound):
-        backend.get("nope")
-    with pytest.raises(ObjectNotFound):
-        backend.stat("nope")
+    def test_delete_idempotent(self, backend):
+        backend.put("k", b"x")
+        backend.delete("k")
+        backend.delete("k")  # second delete is a no-op
+        assert not backend.exists("k")
+        backend.delete("never-existed")  # deleting the unknown too
 
+    def test_stat_sizes(self, backend):
+        backend.put("a", b"12345")
+        assert backend.stat("a").nbytes == 5
 
-def test_delete_idempotent(backend):
-    backend.put("k", b"x")
-    backend.delete("k")
-    backend.delete("k")  # second delete is a no-op
-    assert not backend.exists("k")
+    def test_stat_list_consistency(self, backend):
+        """list() names exactly the live keys and stat() agrees with
+        the stored payload after interleaved puts and deletes."""
+        sizes = {f"v/{i}": i + 1 for i in range(8)}
+        for k, n in sizes.items():
+            backend.put(k, b"z" * n)
+        backend.delete("v/3")
+        del sizes["v/3"]
+        assert sorted(backend.list("v/")) == sorted(sizes)
+        for k, n in sizes.items():
+            assert backend.stat(k).nbytes == n
+            assert len(backend.get(k)) == n
 
+    def test_batch_get_preserves_order(self, backend):
+        keys = [f"v/1/{i}.tvc" for i in range(20)]
+        for i, k in enumerate(keys):
+            backend.put(k, f"payload-{i}".encode())
+        got = backend.batch_get(list(reversed(keys)))
+        assert got == [f"payload-{i}".encode() for i in reversed(range(20))]
 
-def test_stat_sizes(backend):
-    backend.put("a", b"12345")
-    assert backend.stat("a").nbytes == 5
+    def test_batch_get_dedupes_repeated_keys(self, backend):
+        """A key appearing N times in one batch answers N times, in
+        position — the §3 planner dedupes fetches above this seam, so
+        repeats must at minimum stay correct below it."""
+        backend.put("a", b"A")
+        backend.put("b", b"B")
+        assert backend.batch_get(["a", "b", "a", "a", "b"]) == [
+            b"A", b"B", b"A", b"A", b"B",
+        ]
 
+    def test_batch_get_missing_raises(self, backend):
+        backend.put("a", b"x")
+        with pytest.raises(ObjectNotFound):
+            backend.batch_get(["a", "missing"])
 
-def test_batch_get_preserves_order(backend):
-    keys = [f"v/1/{i}.tvc" for i in range(20)]
-    for i, k in enumerate(keys):
-        backend.put(k, f"payload-{i}".encode())
-    got = backend.batch_get(list(reversed(keys)))
-    assert got == [f"payload-{i}".encode() for i in reversed(range(20))]
+    def test_batch_put_roundtrip(self, backend):
+        items = [(f"v/1/{i}.tvc", f"payload-{i}".encode())
+                 for i in range(20)]
+        backend.batch_put(items)
+        assert backend.batch_get([k for k, _ in items]) \
+            == [d for _, d in items]
+        backend.batch_put([("v/1/0.tvc", b"overwritten")])  # overwrite ok
+        assert backend.get("v/1/0.tvc") == b"overwritten"
 
+    def test_batch_put_empty_noop(self, backend):
+        backend.batch_put([])
+        assert backend.list() == []
 
-def test_batch_get_missing_raises(backend):
-    backend.put("a", b"x")
-    with pytest.raises(ObjectNotFound):
-        backend.batch_get(["a", "missing"])
+    def test_list_prefix(self, backend):
+        backend.put("v/1/0.tvc", b"x")
+        backend.put("v/2/0.tvc", b"y")
+        backend.put("w/1/0.tvc", b"z")
+        assert sorted(backend.list("v/")) == ["v/1/0.tvc", "v/2/0.tvc"]
+        assert sorted(backend.list()) \
+            == ["v/1/0.tvc", "v/2/0.tvc", "w/1/0.tvc"]
 
+    def test_atomic_put_visibility(self, backend):
+        """Overwrite atomicity under concurrency: a reader hammering a
+        key while a writer overwrites it sees only complete values —
+        never a torn mix, never a disappearing key."""
+        old, new = b"o" * 4096, b"n" * 8192
+        backend.put("k", old)
+        stop = threading.Event()
+        bad = []
 
-def test_batch_put_roundtrip(backend):
-    items = [(f"v/1/{i}.tvc", f"payload-{i}".encode()) for i in range(20)]
-    backend.batch_put(items)
-    assert backend.batch_get([k for k, _ in items]) == [d for _, d in items]
-    backend.batch_put([("v/1/0.tvc", b"overwritten")])  # overwrite allowed
-    assert backend.get("v/1/0.tvc") == b"overwritten"
+        def reader():
+            while not stop.is_set():
+                try:
+                    v = backend.get("k")
+                except Exception as exc:  # pragma: no cover - fail below
+                    bad.append(repr(exc))
+                    return
+                if v != old and v != new:
+                    bad.append(f"torn read of {len(v)} bytes")
+                    return
 
+        t = threading.Thread(target=reader)
+        t.start()
+        try:
+            for i in range(20):
+                backend.put("k", new if i % 2 == 0 else old)
+        finally:
+            stop.set()
+            t.join(timeout=30.0)
+        assert not bad, bad
 
-def test_batch_put_empty_noop(backend):
-    backend.batch_put([])
-    assert backend.list() == []
+    def test_kind_for_names_a_priced_tier(self, backend):
+        from repro.core.cost import DEFAULT_IO_TABLE
 
-
-def test_list_prefix(backend):
-    backend.put("v/1/0.tvc", b"x")
-    backend.put("v/2/0.tvc", b"y")
-    backend.put("w/1/0.tvc", b"z")
-    assert sorted(backend.list("v/")) == ["v/1/0.tvc", "v/2/0.tvc"]
-    assert sorted(backend.list()) == ["v/1/0.tvc", "v/2/0.tvc", "w/1/0.tvc"]
+        backend.put("k", b"x")
+        assert backend.kind_for("k") in DEFAULT_IO_TABLE
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +273,237 @@ def test_tiered_get_promotes(tmp_path):
     assert "x" in b.hot_keys()
 
 
+# ---------------------------------------------------------------------------
+# write-back tiering (the tiered:remote composition; remote-specific
+# behaviour lives in test_remote.py, chaos in test_faults.py)
+# ---------------------------------------------------------------------------
+
+def test_writeback_put_is_deferred_then_flushed(tmp_path):
+    cold = LocalFSBackend(str(tmp_path))
+    b = TieredBackend(cold, hot_bytes=1 << 20, write_back=True)
+    b.put("a", b"dirty-bytes")
+    assert b.get("a") == b"dirty-bytes"     # visible immediately
+    assert b.stat("a").nbytes == 11
+    assert "a" in b.list()                  # dirty keys listed
+    b.flush()                               # durability barrier
+    assert b.dirty_keys() == []
+    assert cold.get("a") == b"dirty-bytes"  # cold copy landed
+    b.close()
+
+
+def test_writeback_spill_flushes_dirty_before_drop(tmp_path):
+    """Eviction must never lose the only copy of an unuploaded object:
+    a dirty victim is uploaded synchronously, then dropped."""
+    cold = LocalFSBackend(str(tmp_path))
+    b = TieredBackend(cold, hot_bytes=2500, write_back=True)
+    for i in range(10):  # 10 KiB through a 2.5 KiB tier
+        b.put(f"k{i}", bytes([i]) * 1000)
+    assert b.hot_total_bytes <= 2500
+    b.flush()
+    for i in range(10):  # every object durable and readable
+        assert b.get(f"k{i}") == bytes([i]) * 1000
+        assert cold.get(f"k{i}") == bytes([i]) * 1000
+    b.close()
+
+
+def test_writeback_overwrite_while_flushing_keeps_last_write(tmp_path):
+    cold = LocalFSBackend(str(tmp_path))
+    b = TieredBackend(cold, hot_bytes=1 << 20, write_back=True)
+    for round_ in range(5):
+        b.put("k", f"gen-{round_}".encode())
+    b.flush()
+    assert cold.get("k") == b"gen-4"
+    b.close()
+
+
+def test_writeback_delete_beats_trailing_flush(tmp_path):
+    cold = LocalFSBackend(str(tmp_path))
+    b = TieredBackend(cold, hot_bytes=1 << 20, write_back=True)
+    b.put("k", b"x" * 100)
+    b.delete("k")  # may race the background upload; delete must win
+    b.flush()
+    assert not b.exists("k")
+    assert not cold.exists("k")
+    b.close()
+
+
+def test_writeback_close_is_a_durability_barrier(tmp_path):
+    cold = LocalFSBackend(str(tmp_path))
+    b = TieredBackend(cold, hot_bytes=1 << 20, write_back=True)
+    b.batch_put([(f"k{i}", bytes(100)) for i in range(8)])
+    b.close()  # implies flush()
+    assert all(cold.exists(f"k{i}") for i in range(8))
+
+
+def test_oversized_overwrite_invalidates_stale_hot_copy(tmp_path):
+    """An object that outgrew the hot tier bypasses admission — but a
+    smaller hot copy from an earlier write must not keep serving."""
+    cold = LocalFSBackend(str(tmp_path))
+    for wb in (False, True):
+        b = TieredBackend(cold, hot_bytes=100, write_back=wb)
+        b.put("k", b"small")
+        b.put("k", b"X" * 200)  # > hot_bytes: cold-only
+        assert b.get("k") == b"X" * 200
+        assert b.stat("k").nbytes == 200
+        b.batch_put([("k", b"Y" * 300)])
+        assert b.get("k") == b"Y" * 300
+        b.close()
+
+
+def test_writeback_ingest_window_lands_cold_before_indexing(tmp_path):
+    """The ingest durability contract survives the write-back cache:
+    after VSSWriter.close(), every indexed GOP object is already on
+    the cold tier — a crash that wipes the hot tier loses nothing that
+    was acknowledged."""
+    from repro.core.store import VSS
+    from repro.data.video import synthesize_road
+
+    clip = synthesize_road(30, width=96, height=64, seed=4)
+    root = str(tmp_path / "vss")
+    vss = VSS(root, backend="tiered:remote")
+    w = vss.writer("cam", fps=30.0, codec="tvc-ll", gop_frames=10)
+    w.append(clip)
+    w.close()  # durability barrier: durable AND indexed
+    cold = vss.backend.cold
+    gops = [g for g in vss.catalog.all_gops() if g.joint_ref is None]
+    assert gops
+    # deterministically on the cold tier NOW — not whenever the
+    # background flusher gets to it
+    assert all(cold.exists(g.path) for g in gops)
+    # crash that loses the entire hot tier: reads still serve via cold
+    vss.backend._drop_hot()
+    out = vss.read("cam", cache=False).frames
+    assert np.array_equal(out, clip)
+    vss.close()
+
+
+def test_writeback_spill_flush_failure_is_transient_not_terminal(
+        tmp_path):
+    """One cold-tier hiccup during an eviction-forced flush must not
+    terminally pin the key: the attempt counts against the same
+    retry budget the background flusher uses, and the key flushes
+    once the cold tier recovers."""
+    class Hiccup(MemoryBackend):
+        def __init__(self):
+            super().__init__()
+            self.fail_puts = 0
+
+        def put(self, key, data):
+            if self.fail_puts > 0:
+                self.fail_puts -= 1
+                raise IOError("transient cold-tier hiccup")
+            super().put(key, data)
+
+    cold = Hiccup()
+    b = TieredBackend(cold, hot_bytes=2500, write_back=True)
+    b.put("k0", bytes(1000))
+    b.flush()
+    cold.fail_puts = 1  # exactly one failure, then healthy
+    for i in range(1, 6):  # force spills through the failure window
+        b.put(f"k{i}", bytes(1000))
+    b.flush()  # must succeed: one hiccup < FLUSH_MAX_ATTEMPTS
+    for i in range(6):
+        assert cold.get(f"k{i}") == bytes(1000)
+    b.close()
+
+
+class _DownCold(MemoryBackend):
+    """A cold tier that refuses writes until ``down`` clears."""
+
+    def __init__(self):
+        super().__init__()
+        self.down = True
+
+    def put(self, key, data):
+        if self.down:
+            raise IOError("cold tier unreachable")
+        super().put(key, data)
+
+
+def test_writeback_flush_failure_pins_object_hot(tmp_path):
+    cold = _DownCold()
+    b = TieredBackend(cold, hot_bytes=1 << 20, write_back=True)
+    b.put("k", b"precious")
+    with pytest.raises(RuntimeError, match="write-back flush failed"):
+        b.flush()
+    assert b.get("k") == b"precious"  # never dropped
+    cold.down = False
+    b.put("k", b"precious")  # fresh write clears the failure state
+    b.flush()
+    assert cold.get("k") == b"precious"
+    b.close()
+
+
+def test_writeback_oversized_overwrite_never_loses_acknowledged_value(
+        tmp_path):
+    """Degrading an oversized overwrite to write-through must not
+    destroy the previously acknowledged dirty value until the cold put
+    has succeeded — and on failure the old value stays readable AND
+    durable-trackable."""
+    cold = _DownCold()
+    cold.down = False
+    b = TieredBackend(cold, hot_bytes=100, write_back=True)
+    b.put("k", b"small")          # acknowledged; may still be hot-only
+    cold.down = True
+    with pytest.raises(IOError):
+        b.put("k", b"X" * 200)    # oversize: must write through; fails
+    assert b.get("k") == b"small"  # the acknowledged value survives
+    cold.down = False
+    b.flush()                      # ...and still reaches durability
+    assert cold.get("k") == b"small"
+    b.put("k", b"X" * 200)         # healthy: the overwrite lands
+    assert b.get("k") == b"X" * 200
+    assert cold.get("k") == b"X" * 200
+    b.flush()
+    b.close()
+
+
+def test_writeback_flush_scope_covers_only_named_keys(tmp_path):
+    """flush(keys=...) — the per-ingest-window barrier — lands exactly
+    the named keys without waiting on the rest of the dirty set."""
+    cold = MemoryBackend()
+    b = TieredBackend(cold, hot_bytes=1 << 20, write_back=True)
+    b.batch_put([(f"w/{i}", bytes([i]) * 100) for i in range(6)])
+    window = [f"w/{i}" for i in range(3)]
+    b.flush(window)
+    assert all(cold.get(k) == bytes([int(k[2:])]) * 100 for k in window)
+    b.flush()  # global barrier still lands everything else
+    assert sorted(cold.list()) == sorted(f"w/{i}" for i in range(6))
+    b.close()
+
+
+def test_writeback_outage_backpressures_instead_of_growing(tmp_path):
+    """Cold tier down + tier over budget with pinned objects: put must
+    fail (honest backpressure), not absorb dirty bytes at memory speed
+    until the process OOMs."""
+    cold = _DownCold()
+    b = TieredBackend(cold, hot_bytes=2500, write_back=True)
+    with pytest.raises(RuntimeError, match="over budget .* pinned"):
+        for i in range(50):  # outage: eventually the tier must refuse
+            b.put(f"k{i}", bytes(1000))
+    assert b.hot_total_bytes < 50 * 1000  # growth stopped early
+    # recovery: un-pin, flush, and the accepted objects all land
+    cold.down = False
+    assert b.retry_failed() > 0
+    b.flush()
+    for k in b.list():
+        assert cold.get(k) == bytes(1000)
+    b.close()
+
+
+def test_writeback_close_retries_after_cold_tier_recovers(tmp_path):
+    """Objects pinned during an outage get one more chance at close():
+    the cold tier recovered, so close lands them instead of raising."""
+    cold = _DownCold()
+    b = TieredBackend(cold, hot_bytes=1 << 20, write_back=True)
+    b.put("k", b"precious")
+    with pytest.raises(RuntimeError):
+        b.flush()  # pinned while down
+    cold.down = False
+    b.close()  # retry_failed + flush: durable after all
+    assert cold.get("k") == b"precious"
+
+
 def test_make_backend_specs(tmp_path):
     root = str(tmp_path / "o")
     assert isinstance(make_backend("memory", root), MemoryBackend)
@@ -211,10 +512,19 @@ def test_make_backend_specs(tmp_path):
     sh = make_backend("sharded:3", root)
     assert isinstance(sh, ShardedBackend) and len(sh.volumes) == 3
     t = make_backend("tiered:sharded:2", root)
-    assert isinstance(t, TieredBackend)
+    assert isinstance(t, TieredBackend) and not t.write_back
     assert isinstance(t.cold, ShardedBackend) and len(t.cold.volumes) == 2
+    r = make_backend("remote", root + "r")
+    assert isinstance(r, RemoteBackend)
+    r.close()
+    tr = make_backend("tiered:remote", root + "tr")
+    assert isinstance(tr, TieredBackend) and tr.write_back
+    assert isinstance(tr.cold, RemoteBackend)
+    tr.close()
     with pytest.raises(ValueError):
         make_backend("s3", root)
+    with pytest.raises(ValueError):
+        make_backend("remote:ftp://bad", root)
 
 
 # ---------------------------------------------------------------------------
