@@ -1,7 +1,10 @@
 """Gate a benchmark sweep against the committed baseline.
 
     python benchmarks/check_regression.py \
-        --baseline benchmarks/baseline.json --result BENCH_nightly.json
+        --baseline benchmarks/baseline.json [--result BENCH_latest.json]
+
+``--result`` defaults to ``BENCH_latest.json`` at the repo root — the
+artifact ``benchmarks/run.py --json`` writes by default.
 
 The baseline pins {bench/name: {value, unit}} from a reference run
 (``--update-baseline`` regenerates it from a result JSON).  A metric
@@ -24,7 +27,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+
+DEFAULT_RESULT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_latest.json",
+)
 
 LOWER_IS_BETTER_UNITS = {"s", "s/read", "s/frame", "ms"}
 HIGHER_IS_BETTER_UNITS = {"MiB/s", "MB/s", "GiB/s", "frames/s", "x",
@@ -130,7 +139,9 @@ def check(baseline_path: str, result_path: str) -> int:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
-    ap.add_argument("--result", required=True)
+    ap.add_argument("--result", default=DEFAULT_RESULT,
+                    help="sweep JSON to check (default: the repo-root"
+                         " BENCH_latest.json run.py --json writes)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from --result instead of "
                          "checking against it")

@@ -1,21 +1,33 @@
 """Benchmark runner — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--scale 1.0] [--only fig10,...]
-                                            [--json BENCH_out.json]
+                                            [--json [PATH]]
 
 Prints ``bench,name,value,unit,notes`` CSV to stdout; ``--json`` also
 writes the rows (plus run metadata) as JSON — the artifact the nightly
 workflow uploads and feeds to ``benchmarks/check_regression.py``.
+``--json`` with no PATH writes the stable default ``BENCH_latest.json``
+at the repo root, which is also ``check_regression.py``'s default
+``--result`` — so ``run.py --json`` followed by ``check_regression.py``
+just works.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
 import json
+import os
 import platform
 import sys
 import time
 import traceback
+
+# stable, repo-root-anchored artifact name: the latest sweep lands in
+# the same place no matter the working directory the runner used
+DEFAULT_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_latest.json",
+)
 
 MODULES = (
     "fig10_long_reads",
@@ -45,8 +57,10 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--only", default=None,
                     help="comma-separated module prefixes")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write rows + metadata as JSON")
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="PATH",
+                    help="also write rows + metadata as JSON (default"
+                         " PATH: BENCH_latest.json at the repo root)")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
 

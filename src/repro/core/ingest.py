@@ -152,6 +152,7 @@ class IngestPipeline:
         *,
         workers: int = DEFAULT_WORKERS,
         queue_gops: int = DEFAULT_QUEUE_GOPS,
+        registry=None,
     ):
         if queue_gops < 1:
             raise ValueError(f"queue_gops must be >= 1, got {queue_gops}")
@@ -161,7 +162,37 @@ class IngestPipeline:
         self._cv = threading.Condition()
         self._ready: Deque[IngestChannel] = collections.deque()
         self._active: Set[IngestChannel] = set()  # pending or in flight
-        self._stats = IngestStats()
+        # queue depth / high-water mark stay plain ints: the
+        # backpressure predicate reads them under _cv, and they are
+        # state, not monotone counters.  Everything monotone lives in
+        # per-instance repro.obs registry handles — `stats()` is a
+        # snapshot view over them, and /metrics sees the same counts.
+        self._queued_gops = 0
+        self._max_queued_gops = 0
+        from repro.obs.registry import default_registry
+
+        reg = registry or default_registry()
+        self._c_win_sub = reg.counter(
+            "vss_ingest_windows_submitted_total", "publish windows queued")
+        self._c_win_pub = reg.counter(
+            "vss_ingest_windows_published_total",
+            "publish windows durable and indexed")
+        self._c_gop_sub = reg.counter(
+            "vss_ingest_gops_submitted_total", "GOPs queued")
+        self._c_gop_pub = reg.counter(
+            "vss_ingest_gops_published_total", "GOPs durable and indexed")
+        self._c_bytes_pub = reg.counter(
+            "vss_ingest_bytes_published_total", "payload bytes published")
+        self._c_backpressure = reg.counter(
+            "vss_ingest_backpressure_waits_total",
+            "submits that blocked on the queue bound")
+        self._c_errors = reg.counter(
+            "vss_ingest_errors_total", "failed publish windows")
+        self._c_dropped = reg.counter(
+            "vss_ingest_gops_dropped_after_error_total",
+            "queued GOPs discarded behind a failed window")
+        reg.gauge_fn("vss_ingest_queued_gops", self._queued_now,
+                     "GOPs queued or in flight right now")
         self._stop = False
         self._paused = False
         self._threads = [
@@ -171,6 +202,18 @@ class IngestPipeline:
         ]
         for t in self._threads:
             t.start()
+
+    def _queued_now(self) -> float:
+        return self._queued_gops
+
+    def workers_alive(self) -> int:
+        """Live worker threads (0 for a synchronous ``workers=0``
+        pipeline) — `VSS.health` checks this against the queue depth."""
+        return sum(1 for t in self._threads if t.is_alive())
+
+    @property
+    def configured_workers(self) -> int:
+        return len(self._threads)
 
     # -- producer side -----------------------------------------------------
     def channel(self, name: str) -> IngestChannel:
@@ -189,7 +232,7 @@ class IngestPipeline:
             except BaseException as exc:
                 ch.error = exc
                 with self._cv:
-                    self._stats.errors += 1
+                    self._c_errors.inc()
                     ch.submitted += 1
                     ch.settled += 1
                 raise
@@ -205,12 +248,12 @@ class IngestPipeline:
             waited = False
             while (
                 not self._stop
-                and self._stats.queued_gops > 0
-                and self._stats.queued_gops + window.num_gops
+                and self._queued_gops > 0
+                and self._queued_gops + window.num_gops
                 > self.queue_gops
             ):
                 if not waited:
-                    self._stats.backpressure_waits += 1
+                    self._c_backpressure.inc()
                     waited = True
                 self._cv.wait()
             if self._stop:
@@ -227,18 +270,18 @@ class IngestPipeline:
             self._cv.notify_all()
 
     def _count_submit(self, window: PublishWindow) -> None:
-        self._stats.windows_submitted += 1
-        self._stats.gops_submitted += window.num_gops
-        self._stats.queued_gops += window.num_gops
-        self._stats.max_queued_gops = max(
-            self._stats.max_queued_gops, self._stats.queued_gops
+        self._c_win_sub.inc()
+        self._c_gop_sub.inc(window.num_gops)
+        self._queued_gops += window.num_gops
+        self._max_queued_gops = max(
+            self._max_queued_gops, self._queued_gops
         )
 
     def _count_published(self, window: PublishWindow) -> None:
-        self._stats.windows_published += 1
-        self._stats.gops_published += window.num_gops
-        self._stats.bytes_published += window.nbytes
-        self._stats.queued_gops -= window.num_gops
+        self._c_win_pub.inc()
+        self._c_gop_pub.inc(window.num_gops)
+        self._c_bytes_pub.inc(window.nbytes)
+        self._queued_gops -= window.num_gops
 
     # -- barriers ----------------------------------------------------------
     def flush(self, ch: IngestChannel) -> None:
@@ -290,7 +333,18 @@ class IngestPipeline:
 
     def stats(self) -> IngestStats:
         with self._cv:
-            return dataclasses.replace(self._stats)
+            return IngestStats(
+                windows_submitted=int(self._c_win_sub.value),
+                windows_published=int(self._c_win_pub.value),
+                gops_submitted=int(self._c_gop_sub.value),
+                gops_published=int(self._c_gop_pub.value),
+                bytes_published=int(self._c_bytes_pub.value),
+                backpressure_waits=int(self._c_backpressure.value),
+                max_queued_gops=self._max_queued_gops,
+                queued_gops=self._queued_gops,
+                errors=int(self._c_errors.value),
+                gops_dropped_after_error=int(self._c_dropped.value),
+            )
 
     # -- worker side -------------------------------------------------------
     def _worker(self) -> None:
@@ -314,14 +368,14 @@ class IngestPipeline:
                 ch.settled += 1
                 if err is not None:
                     ch.error = err
-                    self._stats.errors += 1
-                    self._stats.queued_gops -= window.num_gops
+                    self._c_errors.inc()
+                    self._queued_gops -= window.num_gops
                     # discard the channel's queue: indexing windows past
                     # a failed one would advance the prefix horizon over
                     # a hole.  The writer re-raises on its next call.
                     dropped = sum(w.num_gops for w in ch.pending)
-                    self._stats.gops_dropped_after_error += dropped
-                    self._stats.queued_gops -= dropped
+                    self._c_dropped.inc(dropped)
+                    self._queued_gops -= dropped
                     ch.settled += len(ch.pending)
                     ch.pending.clear()
                     if ch.queued:

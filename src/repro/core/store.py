@@ -46,6 +46,7 @@ import os
 import threading
 import time
 import warnings
+from collections.abc import Mapping as _Mapping
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -53,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import codec as _codec
+from repro import obs as _obs
 from repro import storage as _storage
 from repro.core import compact as _compact
 from repro.core import ingest as _ingest
@@ -170,36 +172,123 @@ class _CatalogSnapshot:
 
 
 class _BatchIO:
-    """Cross-request fetch/decode dedupe for one ``read_batch`` call.
+    """Cross-request fetch/decode dedupe for one ``read_batch`` call —
+    and the read path's I/O measurement point.
 
     ``prefetch`` pulls every (deduplicated) GOP key a plan group needs
     in ONE ``backend.batch_get`` — the §3 multi-fragment I/O overlap,
     now spanning requests instead of one request's fragments.  Blobs
     and decoded frames live for the duration of the batch, so a GOP
     shared by several overlapping specs is fetched once and decoded
-    once."""
+    once.
 
-    def __init__(self, backend: _storage.StorageBackend):
+    ``stream=True`` (the single-spec ``read()``/``read_spec`` path)
+    keeps the counters but retains nothing: each blob and decoded GOP
+    is used and dropped, preserving the pre-batch peak-memory profile
+    while fetch/decode telemetry still flows into the spec's trace.
+
+    Telemetry per instance: ``objects_fetched`` / ``bytes_fetched`` /
+    ``fetch_seconds`` cover every backend round-trip issued through
+    this context; ``fetched_sizes`` records each key's blob size on
+    first fetch (`VSS._read_batch` attributes group fetches back to
+    individual specs from it); ``claimed`` tracks which planned keys
+    have already been attributed; ``gops_decoded`` counts real decodes
+    (cache hits are free)."""
+
+    def __init__(self, backend: _storage.StorageBackend, *,
+                 stream: bool = False):
         self.backend = backend
+        self.stream = stream
         self.blobs: Dict[str, bytes] = {}
         self.decoded: Dict[int, np.ndarray] = {}  # gop_id -> frames
         self.objects_fetched = 0
+        self.bytes_fetched = 0
+        self.fetch_seconds = 0.0
+        self.gops_decoded = 0
+        self.fetched_sizes: Dict[str, int] = {}
+        self.claimed: set = set()
+
+    def _fetch(self, keys: List[str]) -> List[bytes]:
+        t0 = time.perf_counter()
+        blobs = self.backend.batch_get(keys)
+        self.fetch_seconds += time.perf_counter() - t0
+        self.objects_fetched += len(keys)
+        for k, b in zip(keys, blobs):
+            self.bytes_fetched += len(b)
+            self.fetched_sizes.setdefault(k, len(b))
+        return blobs
+
+    def remember(self, gop_id: int, frames: np.ndarray) -> None:
+        """Count a decode; retain the frames for cross-spec sharing
+        unless streaming."""
+        self.gops_decoded += 1
+        if not self.stream:
+            self.decoded[gop_id] = frames
 
     def prefetch(self, keys: Sequence[str]) -> None:
         missing = [k for k in dict.fromkeys(keys) if k not in self.blobs]
         if missing:
-            self.blobs.update(zip(missing, self.backend.batch_get(missing)))
-            self.objects_fetched += len(missing)
+            self.blobs.update(zip(missing, self._fetch(missing)))
 
     def get(self, key: str) -> bytes:
-        if key not in self.blobs:
-            self.blobs[key] = self.backend.get(key)
-            self.objects_fetched += 1
-        return self.blobs[key]
+        if key in self.blobs:
+            return self.blobs[key]
+        t0 = time.perf_counter()
+        data = self.backend.get(key)
+        self.fetch_seconds += time.perf_counter() - t0
+        self.objects_fetched += 1
+        self.bytes_fetched += len(data)
+        self.fetched_sizes.setdefault(key, len(data))
+        if not self.stream:
+            self.blobs[key] = data
+        return data
 
     def batch_get(self, keys: Sequence[str]) -> List[bytes]:
+        if self.stream:
+            uniq = [k for k in dict.fromkeys(keys)]
+            got = dict(zip(uniq, self._fetch(uniq))) if uniq else {}
+            return [got[k] for k in keys]
         self.prefetch(keys)
         return [self.blobs[k] for k in keys]
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreStats(_Mapping):
+    """`VSS.stats` result: the classic catalog summary plus a typed
+    view over the store's `repro.obs` registry.  Mapping-compatible —
+    ``stats["gops"]`` and friends keep working — with the read-path
+    planner/fetch telemetry and an ingest snapshot alongside.  The
+    registry-backed fields read zero when telemetry is disabled."""
+
+    physical_videos: int
+    gops: int
+    bytes: int
+    budget: int
+    # read path (store-lifetime, not per-video)
+    specs_read: int
+    plan_groups: int
+    specs_coalesced: int
+    objects_fetched: int
+    fetch_bytes: int
+    gop_fetches_deduped: int
+    gops_decoded: int
+    predicted_io_seconds: float
+    actual_io_seconds: float
+    ingest: Optional[_ingest.IngestStats]
+
+    def __getitem__(self, key):
+        if isinstance(key, str) and not key.startswith("_"):
+            try:
+                return getattr(self, key)
+            except AttributeError:
+                pass
+        raise KeyError(key)
+
+    def __iter__(self):
+        return (f.name for f in dataclasses.fields(self))
+
+    def __len__(self) -> int:
+        return len(dataclasses.fields(self))
 
 
 class VSS:
@@ -218,22 +307,38 @@ class VSS:
         pipelined_ingest: bool = True,
         ingest_workers: int = _ingest.DEFAULT_WORKERS,
         ingest_queue_gops: int = _ingest.DEFAULT_QUEUE_GOPS,
+        registry: Optional[_obs.MetricsRegistry] = None,
+        trace_capacity: int = _obs.DEFAULT_TRACE_CAPACITY,
     ):
         self.root = root
         os.makedirs(root, exist_ok=True)
+        # telemetry: one registry threaded through every layer this
+        # store builds (backend wrappers, ingest pipeline, planner
+        # counters) + a bounded ring of per-request trace trees.  The
+        # default is the process-global registry, so several stores in
+        # one process expose one /metrics view while each component's
+        # own handles keep per-instance stats exact.
+        self.registry = (
+            registry if registry is not None else _obs.default_registry()
+        )
+        self.tracer = _obs.Tracer(
+            capacity=trace_capacity, enabled=self.registry.enabled
+        )
         self.catalog = Catalog(os.path.join(root, "catalog.sqlite"))
         if backend is None:
             backend = os.environ.get(_storage.ENV_VAR, _storage.DEFAULT_SPEC)
         made_backend = isinstance(backend, str)
         if made_backend:
             backend = _storage.make_backend(
-                backend, os.path.join(root, "objects")
+                backend, os.path.join(root, "objects"),
+                registry=self.registry,
             )
         self.backend = backend
-        if isinstance(backend, _storage.TieredBackend):
+        tiered = _storage.unwrap(backend, _storage.TieredBackend)
+        if tiered is not None:
             # hot-tier spill ordering = the catalog's LRU_VSS sequence
             # numbers; policy stays in cache.py / the catalog
-            backend.set_priority_fn(self.catalog.lru_for_paths)
+            tiered.set_priority_fn(self.catalog.lru_for_paths)
         # scarce-connection backends (RemoteBackend's socket pool) grow
         # to cover the ingest worker pool — at least one connection per
         # concurrently-publishing worker; a minimum hint, so it never
@@ -307,6 +412,44 @@ class VSS:
         self.ingest_queue_gops = ingest_queue_gops
         self._ingest: Optional[_ingest.IngestPipeline] = None
         self._ingest_init = threading.Lock()
+        # §3 planner / read-path telemetry (all no-ops when the registry
+        # is disabled).  Counters are per-store handles: `stats()` reads
+        # them back exactly, /metrics sums them across stores.
+        reg = self.registry
+        self._m_specs = reg.counter(
+            "vss_read_specs_total", "ReadSpecs executed through read_batch")
+        self._m_groups = reg.counter(
+            "vss_read_plan_groups_total",
+            "joint (video, view-config) plan groups solved")
+        self._m_coalesced = reg.counter(
+            "vss_read_specs_coalesced_total",
+            "specs that rode another spec's joint plan group")
+        self._m_dup_shared = reg.counter(
+            "vss_read_duplicate_specs_shared_total",
+            "exact-duplicate specs served from a batch sibling's result")
+        self._m_objects = reg.counter(
+            "vss_read_objects_fetched_total",
+            "GOP objects fetched by the read path")
+        self._m_fetch_bytes = reg.counter(
+            "vss_read_fetch_bytes_total",
+            "payload bytes fetched by the read path")
+        self._m_dedup = reg.counter(
+            "vss_read_gop_fetches_deduped_total",
+            "planned GOP fetches served from the batch cache instead of"
+            " the backend")
+        self._m_decoded = reg.counter(
+            "vss_read_gops_decoded_total", "GOPs decoded by the read path")
+        self._m_plan_seconds = reg.histogram(
+            "vss_read_plan_seconds", "per-spec section-3 planning time",
+            buckets=_obs.LATENCY_BUCKETS)
+        self._m_predicted_io = reg.counter(
+            "vss_plan_predicted_io_seconds_total",
+            "cost-model predicted I/O seconds for executed plans")
+        self._m_actual_io = reg.counter(
+            "vss_plan_actual_io_seconds_total",
+            "measured backend fetch seconds for executed plans")
+        self._last_scrub: Optional[Dict] = None
+        self._metrics_server: Optional[_storage.ObjectServer] = None
 
     @property
     def ingest(self) -> _ingest.IngestPipeline:
@@ -321,6 +464,7 @@ class VSS:
                         self.backend, self.catalog,
                         workers=self.ingest_workers,
                         queue_gops=self.ingest_queue_gops,
+                        registry=self.registry,
                     )
         return self._ingest
 
@@ -448,6 +592,16 @@ class VSS:
     def _read_batch(self, specs: List[ReadSpec]) -> List[ReadResult]:
         snap = _CatalogSnapshot(self.catalog)
         resolved = [sp.resolve(snap.original(sp.name)) for sp in specs]
+        # per-spec trace roots (plan → fetch → decode → admit children);
+        # None when telemetry is off — zero span bookkeeping on the
+        # disabled path
+        roots: Optional[List[_obs.Span]] = None
+        if self.tracer.enabled:
+            roots = [
+                _obs.Span("read", spec=r.name, t0=r.s, t1=r.e,
+                          codec=r.codec, batch_size=len(specs))
+                for r in resolved
+            ]
 
         # -- plan: one joint problem per (video, view-config) group --------
         groups: Dict[tuple, List[int]] = {}
@@ -460,25 +614,55 @@ class VSS:
                 self._plan_group([resolved[i] for i in members], snap),
             ):
                 plans[i] = plan
+        if roots is not None:
+            self._m_specs.inc(len(specs))
+            self._m_groups.inc(len(groups))
+            self._m_coalesced.inc(len(specs) - len(groups))
+            for i, plan in enumerate(plans):
+                self._m_plan_seconds.observe(plan.plan_seconds)
+                sp = _obs.Span(
+                    "plan", segments=len(plan.segments),
+                    group_size=len(groups[resolved[i].plan_key()]),
+                )
+                sp.dur_s = plan.plan_seconds
+                roots[i].children.append(sp)
 
         # -- prefetch: one batch_get per plan group, deduped per video.
-        # A single-spec batch (the read()/read_spec path) skips the
-        # batch caches entirely: there is nothing to share, and the
-        # pre-batch per-run-group fetch pattern has the lower peak
-        # memory (no blob/decode retention across the call).
-        ios: Dict[str, Optional[_BatchIO]] = {}
-        if len(specs) > 1:
-            for name in dict.fromkeys(r.name for r in resolved):
-                ios[name] = _BatchIO(self.backend)
-            for key, members in groups.items():
+        # A single-spec batch (the read()/read_spec path) streams
+        # instead: there is nothing to share, and the per-run-group
+        # fetch pattern has the lower peak memory (no blob/decode
+        # retention across the call) — its _BatchIO only carries the
+        # telemetry counters.
+        single = len(specs) == 1
+        ios: Dict[str, _BatchIO] = {
+            name: _BatchIO(self.backend, stream=single)
+            for name in dict.fromkeys(r.name for r in resolved)
+        }
+        if not single:
+            for members in groups.values():
+                io = ios[resolved[members[0]].name]
                 keys: List[str] = []
+                claims: List[Tuple[int, int, List[str]]] = []
                 for i in members:
-                    keys.extend(
-                        self._plan_object_keys(plans[i], resolved[i])
+                    objs = self._plan_objects(plans[i])
+                    keys.extend(g.path for g in objs)
+                    if roots is not None:
+                        claims.append(
+                            (i, len(objs), self._claim_fetches(io, objs))
+                        )
+                secs0 = io.fetch_seconds
+                io.prefetch(keys)
+                if roots is not None:
+                    self._fetch_spans(
+                        roots, io, claims, io.fetch_seconds - secs0
                     )
-                ios[resolved[members[0]].name].prefetch(keys)
-        else:
-            ios[resolved[0].name] = None
+        elif roots is not None:
+            # price the plan before execution fetches anything (a
+            # tiered key must be costed at the tier that will actually
+            # serve it, not the hot tier it lands in afterwards)
+            self._claim_fetches(
+                ios[resolved[0].name], self._plan_objects(plans[0])
+            )
 
         # -- execute: duplicates share one materialization.  Within each
         # video group, higher-priority specs materialize first (QoS
@@ -499,7 +683,12 @@ class VSS:
             r = resolved[i]
             plan, io = plans[i], ios[r.name]
             rkey = r.result_key()
-            if rkey in done:
+            shared = rkey in done
+            if roots is not None:
+                t_exec = time.perf_counter()
+                decoded0, fetched0 = io.gops_decoded, io.objects_fetched
+                bytes0, secs0 = io.bytes_fetched, io.fetch_seconds
+            if shared:
                 frames, encoded = done[rkey]
                 # duplicates share the execution, not the buffers: each
                 # result stays independently mutable, as it would be
@@ -518,6 +707,32 @@ class VSS:
                 done[rkey] = (frames, encoded)
                 if self.enable_deferred:
                     self.deferred.on_uncompressed_read(r.name)
+            if roots is not None:
+                root = roots[i]
+                if shared:
+                    self._m_dup_shared.inc()
+                    root.children.append(
+                        _obs.Span("decode", shared=True, gops=0)
+                    )
+                else:
+                    fetch_s = io.fetch_seconds - secs0
+                    if io.objects_fetched > fetched0:
+                        # streaming path: fetches happened inside the
+                        # execution — emit the fetch span from deltas
+                        fsp = _obs.Span(
+                            "fetch", inline=True,
+                            objects=io.objects_fetched - fetched0,
+                            bytes=io.bytes_fetched - bytes0,
+                        )
+                        fsp.dur_s = fetch_s
+                        root.children.append(fsp)
+                    dsp = _obs.Span(
+                        "decode", gops=io.gops_decoded - decoded0
+                    )
+                    dsp.dur_s = max(
+                        0.0, (time.perf_counter() - t_exec) - fetch_s
+                    )
+                    root.children.append(dsp)
             results[i] = ReadResult(frames, r.codec, encoded, plan, r.fps)
 
         # -- cache admission + batched eviction/compaction (§4) ------------
@@ -528,10 +743,15 @@ class VSS:
                 continue
             admitted_keys.add(r.result_key())
             out = results[i]
+            t_admit = time.perf_counter()
             self._admit(
                 r.name, out._frames, out.encoded, r.s, r.e, r.roi,
                 r.resolution, r.fps, r.codec, plans[i],
             )
+            if roots is not None:
+                sp = _obs.Span("admit", video=r.name)
+                sp.dur_s = time.perf_counter() - t_admit
+                roots[i].children.append(sp)
             admitted_names.append(r.name)
         if admitted_names:
             self.cache.evict_for_batch(admitted_names)
@@ -539,7 +759,59 @@ class VSS:
                 for name in dict.fromkeys(admitted_names):
                     _compact.compact(self.catalog, name, self.backend)
 
+        if roots is not None:
+            for io in ios.values():
+                self._m_objects.inc(io.objects_fetched)
+                self._m_fetch_bytes.inc(io.bytes_fetched)
+                self._m_decoded.inc(io.gops_decoded)
+                self._m_actual_io.inc(io.fetch_seconds)
+            for root in roots:
+                self.tracer.record(root.finish())
+
         return results
+
+    # -- read-path telemetry helpers ----------------------------------------
+    def _claim_fetches(
+        self, io: _BatchIO, objs: List[GopMeta]
+    ) -> List[str]:
+        """Attribute one spec's share of its group fetch: the plan's
+        object keys nobody in the batch has fetched or claimed yet.
+        Each claimed fetch is priced through the cost model BEFORE the
+        fetch happens (a tiered key must be priced at the tier that
+        serves it, not the hot tier it lands in afterwards)."""
+        new_keys: List[str] = []
+        predicted = 0.0
+        for g in objs:
+            if g.path in io.blobs or g.path in io.claimed:
+                continue
+            io.claimed.add(g.path)
+            new_keys.append(g.path)
+            predicted += self.cost_model.io_cost(
+                self.backend.kind_for(g.path), g.nbytes
+            )
+        self._m_predicted_io.inc(predicted)
+        return new_keys
+
+    def _fetch_spans(
+        self, roots: List[_obs.Span], io: _BatchIO,
+        claims: List[Tuple[int, int, List[str]]], fetch_wall: float,
+    ) -> None:
+        """One fetch span per plan-group member.  The group's batch_get
+        is one physical round-trip, so wall time is split across
+        members proportionally to their claimed objects; bytes come
+        from the actual blob sizes the fetch recorded."""
+        total = sum(len(ks) for _i, _n, ks in claims) or 1
+        for i, planned, new_keys in claims:
+            self._m_dedup.inc(planned - len(new_keys))
+            sp = _obs.Span(
+                "fetch",
+                objects=len(new_keys),
+                bytes=sum(io.fetched_sizes.get(k, 0) for k in new_keys),
+                planned=planned,
+                dedup_hits=planned - len(new_keys),
+            )
+            sp.dur_s = fetch_wall * (len(new_keys) / total)
+            roots[i].children.append(sp)
 
     # -- joint planning ----------------------------------------------------
     def _plan_group(
@@ -768,24 +1040,22 @@ class VSS:
         return run.gops[-1]
 
     # -- execution ---------------------------------------------------------
-    def _plan_object_keys(
-        self, plan: ReadPlan, r: ResolvedRead
-    ) -> List[str]:
-        """Every plain-GOP object key this plan's execution will touch
+    def _plan_objects(self, plan: ReadPlan) -> List[GopMeta]:
+        """Every plain GOP this plan's execution will touch
         (jointly-compressed GOPs reconstruct through their own segment
         objects and are skipped)."""
-        keys: List[str] = []
+        objs: List[GopMeta] = []
         for run_idx, a, b in self._grouped_segments(plan):
             run = plan.runs[run_idx]
             f0, f1 = self._clamp_frames(
                 run, run.physical.frame_at(a), run.physical.frame_at(b)
             )
-            keys.extend(
-                g.path for g in run.gops
+            objs.extend(
+                g for g in run.gops
                 if g.start_frame < f1 and g.start_frame + g.num_frames > f0
                 and g.joint_ref is None
             )
-        return keys
+        return objs
 
     @staticmethod
     def _grouped_segments(plan: ReadPlan) -> List[Tuple[int, float, float]]:
@@ -918,7 +1188,7 @@ class VSS:
         else:
             frames = self._decode_gop_bytes((io or self.backend).get(g.path))
         if io is not None:
-            io.decoded[g.gop_id] = frames
+            io.remember(g.gop_id, frames)
         return frames
 
     def _load_gops_frames(
@@ -946,7 +1216,7 @@ class VSS:
             else:
                 frames = self._decode_gop_bytes(blobs[g.gop_id])
                 if io is not None:
-                    io.decoded[g.gop_id] = frames
+                    io.remember(g.gop_id, frames)
                 out.append(frames)
         return out
 
@@ -1083,18 +1353,101 @@ class VSS:
     # ------------------------------------------------------------------
     # misc
     # ------------------------------------------------------------------
-    def stats(self, name: str) -> Dict:
+    def stats(self, name: str) -> StoreStats:
+        """Catalog summary for ``name`` plus this store's read-path
+        telemetry (a typed view over the `repro.obs` registry handles).
+        Mapping-compatible: ``stats(name)["gops"]`` keeps working."""
         if self._ingest is not None:  # count fully-indexed state only
             self._ingest.barrier({name})
         physicals = self.catalog.physicals_for(name)
-        return {
-            "physical_videos": len(physicals),
-            "gops": sum(
+        return StoreStats(
+            physical_videos=len(physicals),
+            gops=sum(
                 len(self.catalog.gops_for(p.physical_id)) for p in physicals
             ),
-            "bytes": self.catalog.total_bytes(name),
-            "budget": self.catalog.get_budget(name),
+            bytes=self.catalog.total_bytes(name),
+            budget=self.catalog.get_budget(name),
+            specs_read=int(self._m_specs.value),
+            plan_groups=int(self._m_groups.value),
+            specs_coalesced=int(self._m_coalesced.value),
+            objects_fetched=int(self._m_objects.value),
+            fetch_bytes=int(self._m_fetch_bytes.value),
+            gop_fetches_deduped=int(self._m_dedup.value),
+            gops_decoded=int(self._m_decoded.value),
+            predicted_io_seconds=float(self._m_predicted_io.value),
+            actual_io_seconds=float(self._m_actual_io.value),
+            ingest=self._ingest.stats() if self._ingest is not None else None,
+        )
+
+    def recent_traces(self, n: Optional[int] = None) -> List[Dict]:
+        """The last ``n`` (default: all retained) read-request trace
+        trees, oldest first, as JSON-ready dicts: one ``read`` root per
+        `ReadSpec` with ``plan`` → ``fetch`` → ``decode`` → ``admit``
+        children (see `repro.obs.trace.Span.to_dict` for the schema).
+        Empty when telemetry is disabled."""
+        return self.tracer.recent(n)
+
+    def health(self) -> Dict:
+        """Liveness/readiness snapshot — the body behind ``GET
+        /healthz``.  ``status`` is ``"ok"`` unless the backend probe
+        fails or the ingest pipeline has queued windows with no live
+        worker to drain them; per-layer blocks carry the detail."""
+        t0 = time.perf_counter()
+        backend_ok, backend_err = True, None
+        try:
+            self.backend.exists("healthz-probe")
+        except Exception as exc:  # noqa: BLE001 - a health probe maps
+            # every failure mode to "unreachable", it never raises
+            backend_ok, backend_err = False, f"{type(exc).__name__}: {exc}"
+        backend = {
+            "ok": backend_ok,
+            "probe_seconds": time.perf_counter() - t0,
         }
+        if backend_err:
+            backend["error"] = backend_err
+        ingest: Dict = {"started": self._ingest is not None}
+        ingest_ok = True
+        if self._ingest is not None:
+            st = self._ingest.stats()
+            workers_alive = self._ingest.workers_alive()
+            ingest.update(
+                workers_alive=workers_alive,
+                queued_gops=st.queued_gops,
+                errors=st.errors,
+            )
+            # workers=0 publishes inline — queued windows with zero
+            # LIVE workers is only a failure when workers were asked for
+            ingest_ok = (
+                self._ingest.configured_workers == 0
+                or workers_alive > 0
+                or st.queued_gops == 0
+            )
+            ingest["ok"] = ingest_ok
+        scrub: Dict = {
+            "startup_recovery_clean": self.recovery.clean,
+            "last_scrub": self._last_scrub,
+        }
+        return {
+            "status": "ok" if backend_ok and ingest_ok else "degraded",
+            "backend": backend,
+            "ingest": ingest,
+            "scrub": scrub,
+        }
+
+    def start_metrics_server(
+        self, *, host: str = "127.0.0.1", port: int = 0
+    ) -> _storage.ObjectServer:
+        """Expose this store's ``GET /metrics`` (Prometheus text) and
+        ``GET /healthz`` (JSON) over HTTP.  Starts (once) a store-less
+        `ObjectServer` — object routes answer 503 — on a daemon thread;
+        the returned server's ``.url`` is the scrape target and
+        ``close()`` (or closing the store) shuts it down."""
+        if self._metrics_server is None:
+            self._metrics_server = _storage.ObjectServer(
+                None, host=host, port=port,
+                registry=self.registry, health=self.health,
+            )
+        return self._metrics_server
 
     def scrub(self, *, collect_orphans: bool = False):
         """On-demand integrity pass over every object the catalog
@@ -1116,8 +1469,17 @@ class VSS:
         any writer exists — always collects."""
         if self._ingest is not None:
             self._ingest.drain()
-        return self.backend.scrub(self.catalog,
-                                  collect_orphans=collect_orphans)
+        report = self.backend.scrub(self.catalog,
+                                    collect_orphans=collect_orphans)
+        self._last_scrub = {
+            "t_wall": time.time(),
+            "clean": report.clean,
+            "report": (
+                dataclasses.asdict(report)
+                if dataclasses.is_dataclass(report) else repr(report)
+            ),
+        }
+        return report
 
     def drop(self, name: str) -> None:
         """Delete a logical video: catalog rows and backend objects."""
@@ -1155,6 +1517,9 @@ class VSS:
         return table
 
     def close(self):
+        if self._metrics_server is not None:
+            self._metrics_server.close()
+            self._metrics_server = None
         if self._ingest is not None:
             # land every queued publish window, then stop the workers —
             # close() is a store-wide durability barrier

@@ -51,6 +51,7 @@ from repro.storage.base import (
     RecoveryReport,
     ScrubReport,
     StorageBackend,
+    unwrap,
 )
 from repro.storage.faults import FaultInjectingBackend, InjectedFault
 from repro.storage.httpserver import ObjectServer
@@ -70,7 +71,8 @@ ENV_VAR = "VSS_STORAGE_BACKEND"
 DEFAULT_SPEC = "local"
 
 
-def make_backend(spec: str, root: str) -> StorageBackend:
+def make_backend(spec: str, root: str, *, registry=None,
+                 instrument: bool = True) -> StorageBackend:
     """Build a backend from a spec string; ``root`` anchors fs-backed
     layouts (each spec owns a distinct subtree so they never collide).
 
@@ -90,38 +92,57 @@ def make_backend(spec: str, root: str) -> StorageBackend:
                                  over <root> (tests/CI: a real HTTP
                                  hop with zero external setup)
         remote:<url>             external object server at <url>
-    """
+
+    Every level of a composed spec is wrapped with telemetry
+    (`repro.obs.InstrumentedBackend`), so a ``tiered:remote`` store
+    reports cache-level ops under kind ``tiered`` AND the cold tier's
+    network ops under kind ``remote``.  With the registry disabled (or
+    ``instrument=False``) the bare backend is returned — zero wrapper
+    frames on the hot path.  ``isinstance`` dispatch on the result must
+    go through `repro.storage.unwrap`."""
+    from repro.obs.instrument import instrument_backend
+
+    def _wrap(backend: StorageBackend, kind: str) -> StorageBackend:
+        if not instrument:
+            return backend
+        return instrument_backend(backend, kind=kind, registry=registry)
+
     spec = (spec or DEFAULT_SPEC).strip().lower()
     head, _, rest = spec.partition(":")
     if head in ("local", "localfs"):
-        return LocalFSBackend(root, fsync=rest == "fsync")
+        return _wrap(LocalFSBackend(root, fsync=rest == "fsync"), "localfs")
     if head == "memory":
-        return MemoryBackend()
+        return _wrap(MemoryBackend(), "memory")
     if head == "sharded":
         n = int(rest) if rest else 2
-        return ShardedBackend.local(root, n)
+        return _wrap(ShardedBackend.local(root, n), "sharded")
     if head == "remote":
         if rest:
-            return RemoteBackend(rest)
-        return RemoteBackend.self_hosted(root)
+            return _wrap(RemoteBackend(rest, registry=registry), "remote")
+        return _wrap(
+            RemoteBackend.self_hosted(root, registry=registry), "remote"
+        )
     if head == "tiered":
-        cold = make_backend(rest or DEFAULT_SPEC, root)
+        cold = make_backend(rest or DEFAULT_SPEC, root, registry=registry,
+                            instrument=instrument)
         # a remote cold tier gets the write-back composition (ISSUE:
         # fast local cache over a slow object store); every other cold
         # tier keeps the durable write-through discipline
-        return TieredBackend(
-            cold, write_back=isinstance(cold, RemoteBackend)
-        )
+        return _wrap(TieredBackend(
+            cold, write_back=unwrap(cold, RemoteBackend) is not None,
+            registry=registry,
+        ), "tiered")
     if head == "replicated":
         parts = [int(p) for p in rest.split(":") if p] if rest else []
         if len(parts) > 3:
             raise ValueError(f"unknown storage backend spec {spec!r}")
         n = parts[0] if parts else 3
-        return ReplicatedBackend.local(
+        return _wrap(ReplicatedBackend.local(
             root, n,
             replicas=parts[1] if len(parts) > 1 else None,
             write_quorum=parts[2] if len(parts) > 2 else None,
-        )
+            registry=registry,
+        ), "replicated")
     raise ValueError(f"unknown storage backend spec {spec!r}")
 
 
@@ -149,5 +170,6 @@ __all__ = [
     "make_backend",
     "scavenge",
     "scrub",
+    "unwrap",
     "validate_gop_bytes",
 ]

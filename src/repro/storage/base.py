@@ -175,6 +175,37 @@ class StorageBackend(abc.ABC):
         pass
 
 
+def unwrap(backend, cls=None):
+    """Walk a delegating-wrapper chain (``InstrumentedBackend``,
+    ``FaultInjectingBackend`` — anything exposing ``inner``), also
+    descending through a tiered backend's ``cold`` child.
+
+    With ``cls``, return the first backend in the chain that is an
+    instance of ``cls`` (or ``None``); without, return the innermost
+    backend on the wrapper (not ``cold``) chain.  Type dispatch on a
+    backend (``isinstance`` checks in the store, in ``make_backend``)
+    must go through this, since ``make_backend`` auto-wraps every
+    level with telemetry."""
+    b = backend
+    while isinstance(b, StorageBackend):
+        if cls is not None and isinstance(b, cls):
+            return b
+        nxt = getattr(b, "inner", None)
+        if not isinstance(nxt, StorageBackend):
+            if cls is not None:
+                # composition, not delegation: a tiered store's cold
+                # tier still "is" part of the stack for dispatch
+                # purposes (e.g. finding the RemoteBackend behind a
+                # write-back cache)
+                cold = getattr(b, "cold", None)
+                if isinstance(cold, StorageBackend):
+                    return unwrap(cold, cls)
+                return None
+            return b
+        b = nxt
+    return None if cls is not None else backend
+
+
 @dataclasses.dataclass
 class RecoveryReport:
     """What the startup scavenger found and fixed."""

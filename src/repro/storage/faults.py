@@ -49,6 +49,7 @@ class FaultInjectingBackend(StorageBackend):
         error_rate: float = 0.0,
         torn_write_rate: float = 0.0,
         latency: float = 0.0,
+        registry=None,
     ):
         if not 0.0 <= error_rate <= 1.0:
             raise ValueError(f"error_rate must be in [0,1], got {error_rate}")
@@ -65,11 +66,34 @@ class FaultInjectingBackend(StorageBackend):
         self._forced_failures = 0
         self._hung = threading.Event()
         self._hung.set()  # set == running; cleared == hung
-        # observability (chaos tests assert against these)
-        self.ops = 0
-        self.injected_errors = 0
-        self.injected_torn = 0
+        # observability: chaos tests assert against `ops`/
+        # `injected_errors`/`injected_torn`, which are views over
+        # per-instance repro.obs registry handles (one source of truth
+        # with /metrics)
+        from repro.obs.registry import default_registry
+
+        reg = registry or default_registry()
+        self._c_ops = reg.counter(
+            "vss_fault_ops_total", "operations through the fault wrapper")
+        self._c_errors = reg.counter(
+            "vss_fault_injected_total", "injected faults",
+            {"fault": "error"})
+        self._c_torn = reg.counter(
+            "vss_fault_injected_total", "injected faults",
+            {"fault": "torn"})
         self.fault_log: List[str] = []  # "<op> <kind>" per injection
+
+    @property
+    def ops(self) -> int:
+        return int(self._c_ops.value)
+
+    @property
+    def injected_errors(self) -> int:
+        return int(self._c_errors.value)
+
+    @property
+    def injected_torn(self) -> int:
+        return int(self._c_torn.value)
 
     # -- controls ----------------------------------------------------------
     def fail_next(self, n: int = 1) -> None:
@@ -91,7 +115,7 @@ class FaultInjectingBackend(StorageBackend):
         latency, then forced/random transient errors."""
         self._hung.wait()
         with self._lock:
-            self.ops += 1
+            self._c_ops.inc()
             delay = (
                 self._rng.uniform(0.0, 2.0 * self.latency)
                 if self.latency > 0 else 0.0
@@ -103,7 +127,7 @@ class FaultInjectingBackend(StorageBackend):
                 fail = (self.error_rate > 0
                         and self._rng.random() < self.error_rate)
             if fail:
-                self.injected_errors += 1
+                self._c_errors.inc()
                 self.fault_log.append(f"{op} error {key}".rstrip())
         if delay:
             time.sleep(delay)
@@ -115,7 +139,7 @@ class FaultInjectingBackend(StorageBackend):
             torn = (self.torn_write_rate > 0
                     and self._rng.random() < self.torn_write_rate)
             if torn:
-                self.injected_torn += 1
+                self._c_torn.inc()
                 self.fault_log.append(f"{op} torn {key}")
         return torn
 

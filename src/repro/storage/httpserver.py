@@ -14,6 +14,16 @@ could re-implement it:
     POST   /rename?src=<a>&dst=<b> server-side atomic commit: move the
                                    object at <a> to <b> (404 if <a> is
                                    missing)
+    GET    /metrics                Prometheus text exposition of the
+                                   attached `repro.obs` registry
+    GET    /healthz                JSON health report (200 ok /
+                                   503 degraded) from the attached
+                                   health callback
+
+``/metrics`` and ``/healthz`` answer 404 unless the server was built
+with a ``registry`` / ``health`` callback; `VSS.start_metrics_server`
+builds a store-less instance (object routes answer 503) that serves
+only the observability pair.
 
 Keys are URL-quoted path segments (``/`` survives).  Storage-level
 misses answer 404, anything else a backend raises answers 500 — which
@@ -38,11 +48,12 @@ Standalone (for benchmarks against a real network hop):
 """
 from __future__ import annotations
 
+import json
 import re
 import threading
 import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.storage.base import ObjectNotFound, StorageBackend
 
@@ -55,7 +66,7 @@ class _Handler(BaseHTTPRequestHandler):
 
     # the ThreadingHTTPServer subclass carries the backing store
     @property
-    def store(self) -> StorageBackend:
+    def store(self) -> Optional[StorageBackend]:
         return self.server.store  # type: ignore[attr-defined]
 
     def log_message(self, fmt, *args):  # pragma: no cover - silence
@@ -68,6 +79,10 @@ class _Handler(BaseHTTPRequestHandler):
             # the request may carry an unread body (PUT): drop the
             # connection rather than desync the keep-alive stream
             self._respond(400, b"bad path", close=True)
+            return None
+        if self.store is None:
+            # metrics-only server: no object plane behind it
+            self._respond(503, b"no object store", close=True)
             return None
         return urllib.parse.unquote(path[len("/o/"):])
 
@@ -113,7 +128,35 @@ class _Handler(BaseHTTPRequestHandler):
     # -- verbs -------------------------------------------------------------
     def do_GET(self):
         path = urllib.parse.urlsplit(self.path).path
+        if path == "/metrics":
+            registry = self.server.registry  # type: ignore[attr-defined]
+            if registry is None:
+                self._respond(404, b"no metrics registry attached")
+                return
+            body = registry.render_prometheus().encode()
+            self._respond(200, body, extra={
+                "Content-Type": "text/plain; version=0.0.4; charset=utf-8"
+            })
+            return
+        if path == "/healthz":
+            health = self.server.health  # type: ignore[attr-defined]
+            if health is None:
+                self._respond(404, b"no health callback attached")
+                return
+            try:
+                report = health()
+                status = 200 if report.get("status") == "ok" else 503
+            except Exception as exc:  # noqa: BLE001 - wire boundary
+                report = {"status": "error",
+                          "error": f"{type(exc).__name__}: {exc}"}
+                status = 503
+            self._respond(status, json.dumps(report, indent=2).encode(),
+                          extra={"Content-Type": "application/json"})
+            return
         if path == "/list":
+            if self.store is None:
+                self._respond(503, b"no object store", close=True)
+                return
             prefix = self._query().get("prefix", "")
             ok, keys = self._guard(self.store.list, prefix)
             if ok:
@@ -184,6 +227,9 @@ class _Handler(BaseHTTPRequestHandler):
         if path != "/rename":
             self._respond(400, b"bad path", close=True)
             return
+        if self.store is None:
+            self._respond(503, b"no object store", close=True)
+            return
         q = self._query()  # parse_qs already URL-decoded the values
         src, dst = q.get("src"), q.get("dst")
         if not src or not dst:
@@ -206,9 +252,12 @@ class _Server(ThreadingHTTPServer):
     daemon_threads = True
     allow_reuse_address = True
 
-    def __init__(self, addr, store: StorageBackend):
+    def __init__(self, addr, store: Optional[StorageBackend],
+                 registry=None, health: Optional[Callable] = None):
         super().__init__(addr, _Handler)
         self.store = store
+        self.registry = registry
+        self.health = health
         self._rename_locks: dict = {}
         self._rename_locks_guard = threading.Lock()
 
@@ -233,12 +282,19 @@ class ObjectServer:
     backing store is shared state — the server never copies it — so a
     test can reach behind the wire (tear an object, count ops, inject
     faults via `FaultInjectingBackend`) while the client speaks HTTP.
+
+    ``registry`` (a `repro.obs.MetricsRegistry`) activates ``GET
+    /metrics``; ``health`` (a zero-arg callable returning a dict with
+    a ``"status"`` key) activates ``GET /healthz``.  ``store=None``
+    builds a metrics-only server whose object routes answer 503.
     """
 
-    def __init__(self, store: StorageBackend, *, host: str = "127.0.0.1",
-                 port: int = 0):
+    def __init__(self, store: Optional[StorageBackend], *,
+                 host: str = "127.0.0.1", port: int = 0,
+                 registry=None, health: Optional[Callable] = None):
         self.store = store
-        self._httpd = _Server((host, port), store)
+        self._httpd = _Server((host, port), store,
+                              registry=registry, health=health)
         self._thread = threading.Thread(
             target=self._httpd.serve_forever, daemon=True,
             name="vss-object-server",

@@ -106,6 +106,7 @@ class RemoteBackend(StorageBackend):
         backoff_base: float = DEFAULT_BACKOFF_BASE,
         backoff_max: float = DEFAULT_BACKOFF_MAX,
         timeout: float = DEFAULT_TIMEOUT,
+        registry=None,
         _owned_server=None,
     ):
         parts = urllib.parse.urlsplit(url)
@@ -130,7 +131,21 @@ class RemoteBackend(StorageBackend):
         self._lock = threading.Lock()
         self._counter = itertools.count()
         self._pool: Optional[ThreadPoolExecutor] = None
-        self.retries = 0  # observability: transport retries performed
+        # transport telemetry (repro.obs); `retries` stays readable as a
+        # plain attribute (it is a thin view over the registry handle)
+        from repro.obs.registry import default_registry
+
+        reg = registry or default_registry()
+        self._c_retries = reg.counter(
+            "vss_remote_retries_total",
+            "transport retries (connection errors + 5xx)")
+        self._c_conns_created = reg.counter(
+            "vss_remote_connections_created_total",
+            "new sockets opened because the idle pool was empty")
+        self._c_pool_overflow = reg.counter(
+            "vss_remote_pool_overflow_total",
+            "connections closed on return because the pool was full"
+            " (fan-out exceeded the configured pool size)")
 
     @classmethod
     def self_hosted(cls, root: str, **kw) -> "RemoteBackend":
@@ -169,10 +184,16 @@ class RemoteBackend(StorageBackend):
                 )
             return self._pool
 
+    @property
+    def retries(self) -> int:
+        """Transport retries performed (view over the registry counter)."""
+        return int(self._c_retries.value)
+
     def _borrow(self) -> http.client.HTTPConnection:
         with self._lock:
             if self._idle:
                 return self._idle.pop()
+        self._c_conns_created.inc()
         return http.client.HTTPConnection(
             self.host, self.port, timeout=self.timeout
         )
@@ -182,6 +203,7 @@ class RemoteBackend(StorageBackend):
             if len(self._idle) < self._connections:
                 self._idle.append(conn)
                 return
+        self._c_pool_overflow.inc()
         conn.close()
 
     # -- request core ------------------------------------------------------
@@ -195,8 +217,7 @@ class RemoteBackend(StorageBackend):
         last: Optional[BaseException] = None
         for attempt in range(self.max_retries + 1):
             if attempt:
-                with self._lock:
-                    self.retries += 1
+                self._c_retries.inc()
                 time.sleep(min(self.backoff_max,
                                self.backoff_base * (2 ** (attempt - 1))))
             conn = self._borrow()

@@ -55,7 +55,6 @@ put can resurrect a replica on one child; the scrubber prunes it.
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 import threading
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
@@ -93,13 +92,59 @@ class ChildDownError(IOError):
     """Raised on any access to a child marked down (ops seam)."""
 
 
-@dataclasses.dataclass
 class ReplicaStats:
-    """Monotonic health counters (observability for fig25 and ops)."""
+    """Monotonic health counters (observability for fig25 and ops).
 
-    fallback_reads: int = 0      # reads served by a non-preferred replica
-    degraded_writes: int = 0     # puts that met quorum but not full R
-    straggler_failures: int = 0  # background replica writes that failed
+    The attribute shape (``stats.fallback_reads`` ints, ``+=``-able
+    under the backend lock) is the legacy surface; the values live in
+    per-instance `repro.obs` registry handles so the same counts feed
+    ``/metrics`` without double bookkeeping."""
+
+    __slots__ = ("_fallback", "_degraded", "_straggler")
+
+    def __init__(self, registry=None):
+        from repro.obs.registry import default_registry
+
+        reg = registry or default_registry()
+        self._fallback = reg.counter(
+            "vss_replica_fallback_reads_total",
+            "reads served by a non-preferred replica")
+        self._degraded = reg.counter(
+            "vss_replica_degraded_writes_total",
+            "puts that met quorum but not full replication")
+        self._straggler = reg.counter(
+            "vss_replica_straggler_failures_total",
+            "background replica writes that failed")
+
+    @staticmethod
+    def _bump(handle, new: int) -> None:
+        delta = float(new) - handle.value
+        if delta > 0:
+            handle.inc(delta)
+
+    @property
+    def fallback_reads(self) -> int:
+        return int(self._fallback.value)
+
+    @fallback_reads.setter
+    def fallback_reads(self, new: int) -> None:
+        self._bump(self._fallback, new)
+
+    @property
+    def degraded_writes(self) -> int:
+        return int(self._degraded.value)
+
+    @degraded_writes.setter
+    def degraded_writes(self, new: int) -> None:
+        self._bump(self._degraded, new)
+
+    @property
+    def straggler_failures(self) -> int:
+        return int(self._straggler.value)
+
+    @straggler_failures.setter
+    def straggler_failures(self, new: int) -> None:
+        self._bump(self._straggler, new)
 
 
 class ReplicatedBackend(StorageBackend):
@@ -112,6 +157,7 @@ class ReplicatedBackend(StorageBackend):
         replicas: Optional[int] = None,
         write_quorum: Optional[int] = None,
         validate=None,  # Optional[Callable[[bytes], bool]] corruption hook
+        registry=None,
     ):
         if not children:
             raise ValueError("ReplicatedBackend needs at least one child")
@@ -132,7 +178,18 @@ class ReplicatedBackend(StorageBackend):
             )
         self.ring = HashRing(n)
         self.validate = validate
-        self.stats = ReplicaStats()
+        self.stats = ReplicaStats(registry)
+        from repro.obs.registry import default_registry
+
+        reg = registry or default_registry()
+        self._c_scrub_runs = reg.counter(
+            "vss_scrub_runs_total", "integrity scrubs executed")
+        self._c_scrub_repaired = reg.counter(
+            "vss_scrub_replicas_repaired_total",
+            "missing/torn/divergent replicas rewritten by scrubs")
+        self._c_scrub_pruned = reg.counter(
+            "vss_scrub_replicas_pruned_total",
+            "misplaced replicas removed by scrubs")
         self._down: Set[int] = set()
         self._stragglers: Set[Future] = set()
         # key -> its in-flight straggler futures: a later put/delete of
@@ -157,13 +214,14 @@ class ReplicatedBackend(StorageBackend):
         replicas: Optional[int] = None,
         write_quorum: Optional[int] = None,
         fsync: bool = False,
+        registry=None,
     ) -> "ReplicatedBackend":
         return cls(
             [
                 LocalFSBackend(os.path.join(root, f"replica{i}"), fsync=fsync)
                 for i in range(n_children)
             ],
-            replicas=replicas, write_quorum=write_quorum,
+            replicas=replicas, write_quorum=write_quorum, registry=registry,
         )
 
     # -- ops seam ----------------------------------------------------------
@@ -582,7 +640,11 @@ class ReplicatedBackend(StorageBackend):
         self.quiesce()
         with self._lock:
             self._kind_memo.clear()  # repairs change who serves a key
-        return scrub(self, catalog, collect_orphans=collect_orphans)
+        report = scrub(self, catalog, collect_orphans=collect_orphans)
+        self._c_scrub_runs.inc()
+        self._c_scrub_repaired.inc(report.replicas_repaired)
+        self._c_scrub_pruned.inc(report.replicas_pruned)
+        return report
 
     def close(self) -> None:
         self.quiesce()

@@ -47,6 +47,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs.registry import default_registry
 from repro.storage.base import ObjectStat, StorageBackend
 
 DEFAULT_HOT_BYTES = 256 * 1024 * 1024
@@ -65,6 +66,7 @@ class TieredBackend(StorageBackend):
         *,
         hot_bytes: int = DEFAULT_HOT_BYTES,
         write_back: bool = False,
+        registry=None,
     ):
         self.cold = cold
         self.hot_bytes = hot_bytes
@@ -84,6 +86,33 @@ class TieredBackend(StorageBackend):
         self._failed: Dict[str, BaseException] = {}  # terminal failures
         self._stop = False
         self._flusher: Optional[threading.Thread] = None
+        # -- telemetry (repro.obs): hit/miss/spill counters + hot-tier
+        # gauges.  Handles are per-instance (exact), series process-wide
+        # (summed on /metrics); gauges sample through weak refs so a
+        # dropped tier stops reporting instead of leaking.
+        reg = registry or default_registry()
+        self._c_hits = reg.counter(
+            "vss_cache_hits_total", "hot-tier read hits")
+        self._c_misses = reg.counter(
+            "vss_cache_misses_total", "hot-tier read misses (cold fetch)")
+        self._c_spills = reg.counter(
+            "vss_cache_spills_total", "hot objects demoted by the spiller")
+        self._c_flushes = reg.counter(
+            "vss_cache_writeback_flushes_total",
+            "dirty objects landed on the cold tier")
+        self._c_flush_failures = reg.counter(
+            "vss_cache_writeback_flush_failures_total",
+            "failed flush attempts (terminal after FLUSH_MAX_ATTEMPTS)")
+        reg.gauge_fn("vss_cache_hot_bytes", self._hot_bytes_now,
+                     "bytes resident in the hot tier")
+        reg.gauge_fn("vss_cache_hot_objects", self._hot_count_now,
+                     "objects resident in the hot tier")
+        reg.gauge_fn("vss_cache_writeback_dirty_objects",
+                     self._dirty_count_now,
+                     "dirty objects queued for write-back flush")
+        reg.gauge_fn("vss_cache_writeback_pinned_objects",
+                     self._pinned_count_now,
+                     "objects pinned hot by terminal flush failures")
         if write_back:
             self._flusher = threading.Thread(
                 target=self._flush_loop, daemon=True,
@@ -93,6 +122,19 @@ class TieredBackend(StorageBackend):
 
     def set_priority_fn(self, fn: Optional[PriorityFn]) -> None:
         self._priority_fn = fn
+
+    # -- gauge samplers (registered as weak callback gauges) ---------------
+    def _hot_bytes_now(self) -> float:
+        return self._hot_total
+
+    def _hot_count_now(self) -> float:
+        return len(self._hot)
+
+    def _dirty_count_now(self) -> float:
+        return len(self._dirty)
+
+    def _pinned_count_now(self) -> float:
+        return len(self._failed)
 
     # -- hot-tier bookkeeping ----------------------------------------------
     def _admit(self, key: str, data: bytes, *, dirty: bool = False) -> None:
@@ -166,6 +208,7 @@ class TieredBackend(StorageBackend):
                 gen = self._dirty.get(victim)
                 if gen is None:
                     self._drop_one_locked(victim)
+                    self._c_spills.inc()
                     continue
                 data = self._hot[victim]
                 self._inflight[victim] = self._inflight.get(victim, 0) + 1
@@ -180,15 +223,18 @@ class TieredBackend(StorageBackend):
                         # can't flush, so can't drop; count the attempt
                         # like the background flusher would, and move
                         # on to the next victim in this pass
+                        self._c_flush_failures.inc()
                         n_fail = self._attempts.get(victim, 0) + 1
                         self._attempts[victim] = n_fail
                         if n_fail >= FLUSH_MAX_ATTEMPTS:
                             self._failed[victim] = err
                         continue
+                    self._c_flushes.inc()
                     if self._dirty.get(victim) == gen:
                         del self._dirty[victim]
                         self._attempts.pop(victim, None)
                         self._drop_one_locked(victim)
+                        self._c_spills.inc()
                     # a newer write raced in: leave it for the flusher
             finally:
                 with self._cv:
@@ -252,10 +298,12 @@ class TieredBackend(StorageBackend):
                 else:
                     self._inflight[key] = n
                 if err is None:
+                    self._c_flushes.inc()
                     self._attempts.pop(key, None)
                     if self._dirty.get(key) == gen:
                         del self._dirty[key]
                 else:
+                    self._c_flush_failures.inc()
                     n_fail = self._attempts.get(key, 0) + 1
                     self._attempts[key] = n_fail
                     if n_fail >= FLUSH_MAX_ATTEMPTS:
@@ -329,6 +377,10 @@ class TieredBackend(StorageBackend):
                 except BaseException as exc:
                     err = exc
                 with self._cv:
+                    if err is None:
+                        self._c_flushes.inc(len(batch))
+                    else:
+                        self._c_flush_failures.inc(len(batch))
                     for k, (gen, _d) in batch.items():
                         if err is None:
                             self._attempts.pop(k, None)
@@ -454,7 +506,9 @@ class TieredBackend(StorageBackend):
         with self._lock:
             data = self._hot.get(key)
         if data is not None:
+            self._c_hits.inc()
             return data
+        self._c_misses.inc()
         data = self.cold.get(key)
         if len(data) <= self.hot_bytes:
             self._admit(key, data)
@@ -464,6 +518,8 @@ class TieredBackend(StorageBackend):
         with self._lock:
             hot = {k: self._hot[k] for k in keys if k in self._hot}
         missing = [k for k in keys if k not in hot]
+        self._c_hits.inc(len(keys) - len(missing))
+        self._c_misses.inc(len(missing))
         if missing:
             fetched = dict(zip(missing, self.cold.batch_get(missing)))
             for k, v in fetched.items():

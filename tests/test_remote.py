@@ -233,16 +233,18 @@ def test_configure_concurrency_grows_but_never_shrinks(served):
 def test_vss_sizes_remote_pool_to_ingest_workers(tmp_path):
     from repro.core.store import VSS
 
+    from repro.storage import unwrap
+
     vss = VSS(str(tmp_path / "vss"), backend="remote", ingest_workers=7)
     try:
-        assert isinstance(vss.backend, RemoteBackend)
+        assert unwrap(vss.backend, RemoteBackend) is not None
         assert vss.backend._connections == 7
     finally:
         vss.close()
     vss2 = VSS(str(tmp_path / "vss2"), backend="tiered:remote",
                ingest_workers=5)
     try:
-        assert isinstance(vss2.backend.cold, RemoteBackend)
+        assert unwrap(vss2.backend.cold, RemoteBackend) is not None
         assert vss2.backend.cold._connections == 5  # forwarded by tiered
     finally:
         vss2.close()

@@ -21,6 +21,7 @@ from repro.storage import (
     ReplicatedBackend,
     ReplicationError,
     make_backend,
+    unwrap,
     validate_gop_bytes,
 )
 
@@ -212,7 +213,8 @@ def test_kind_for_answers_per_replica(tmp_path):
 def test_make_backend_replicated_specs(tmp_path):
     root = str(tmp_path / "o")
     b = make_backend("replicated", root)
-    assert isinstance(b, ReplicatedBackend)
+    # make_backend wraps with telemetry; attribute access delegates
+    assert unwrap(b, ReplicatedBackend) is not None
     assert len(b.children) == 3 and b.replicas == 3 and b.write_quorum == 2
     b5 = make_backend("replicated:5", root + "5")
     assert len(b5.children) == 5 and b5.replicas == 3 and b5.write_quorum == 2

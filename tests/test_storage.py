@@ -15,6 +15,7 @@ from repro.storage import (
     ShardedBackend,
     TieredBackend,
     make_backend,
+    unwrap,
 )
 from repro.storage.localfs import TEMP_MARKER
 
@@ -505,26 +506,34 @@ def test_writeback_close_retries_after_cold_tier_recovers(tmp_path):
 
 
 def test_make_backend_specs(tmp_path):
+    # make_backend wraps every composition level with telemetry, so
+    # isinstance dispatch goes through unwrap(); plain attribute access
+    # (.fsync, .cold, .write_back) delegates transparently
     root = str(tmp_path / "o")
-    assert isinstance(make_backend("memory", root), MemoryBackend)
-    assert isinstance(make_backend("local", root), LocalFSBackend)
+    assert unwrap(make_backend("memory", root), MemoryBackend) is not None
+    assert unwrap(make_backend("local", root), LocalFSBackend) is not None
     assert make_backend("local:fsync", root).fsync
     sh = make_backend("sharded:3", root)
-    assert isinstance(sh, ShardedBackend) and len(sh.volumes) == 3
+    assert unwrap(sh, ShardedBackend) is not None and len(sh.volumes) == 3
     t = make_backend("tiered:sharded:2", root)
-    assert isinstance(t, TieredBackend) and not t.write_back
-    assert isinstance(t.cold, ShardedBackend) and len(t.cold.volumes) == 2
+    assert unwrap(t, TieredBackend) is not None and not t.write_back
+    assert unwrap(t.cold, ShardedBackend) is not None
+    assert len(t.cold.volumes) == 2
     r = make_backend("remote", root + "r")
-    assert isinstance(r, RemoteBackend)
+    assert unwrap(r, RemoteBackend) is not None
     r.close()
     tr = make_backend("tiered:remote", root + "tr")
-    assert isinstance(tr, TieredBackend) and tr.write_back
-    assert isinstance(tr.cold, RemoteBackend)
+    assert unwrap(tr, TieredBackend) is not None and tr.write_back
+    assert unwrap(tr.cold, RemoteBackend) is not None
     tr.close()
     with pytest.raises(ValueError):
         make_backend("s3", root)
     with pytest.raises(ValueError):
         make_backend("remote:ftp://bad", root)
+    # uninstrumented build keeps the bare types
+    assert isinstance(
+        make_backend("memory", root, instrument=False), MemoryBackend
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -558,7 +567,7 @@ def test_vss_env_backend_selection(tmp_path, short_clip, monkeypatch):
 
     monkeypatch.setenv(ENV_VAR, "sharded:2")
     vss = VSS(str(tmp_path / "vss"))
-    assert isinstance(vss.backend, ShardedBackend)
+    assert unwrap(vss.backend, ShardedBackend) is not None
     vss.write("v", short_clip, fps=30.0, codec="tvc-med", gop_frames=10)
     assert np.asarray(vss.read("v", codec="rgb", cache=False).frames).shape \
         == short_clip.shape
