@@ -1,0 +1,242 @@
+"""Fig. 27 (beyond-paper) — VSS-as-a-service: coalesced concurrent
+serving vs per-request sequential serving, plus deadline-aware QoS.
+
+Workload: 8 concurrent HTTP clients hammer a `VSSService` with
+overlapping declarative reads (4 distinct views cycled across clients,
+so the batch planner sees both plan-group sharing and exact-duplicate
+dedupe).  Every request walks the full wire path: POST the ReadSpec,
+receive the signed-URL manifest, GET every segment's bytes.
+
+  * **coalesced vs sequential** — the same store served twice: once
+    with the intake-window coalescer on (concurrent arrivals become one
+    ``read_batch`` joint plan) and once degraded to per-request
+    execution (``window_s=0, max_batch=1``), which is what a naive
+    handler-per-request front end does.  Coalescing must win aggregate
+    throughput by >= 1.5x — asserted at every scale, so the CI
+    ``--quick`` run is a real serving gate;
+  * **overload honesty** — a burst with two already-expired deadlines
+    (``deadline_ms=0``): exactly those two must answer 503 + Retry-After
+    while every admitted request completes, and the admitted p99 stays
+    within its gate (no latency collapse from the shed load).
+
+Reads use ``cache=False`` so both serving passes execute identical
+work (cache admissions from pass 1 would otherwise subsidize pass 2).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+from benchmarks.common import Row, fresh_store, road, timer
+from repro.obs.registry import MetricsRegistry
+from repro.serving.service import VSSService
+
+CLIENTS = 8                 # the acceptance gate is "8+ concurrent"
+MIN_COALESCE_SPEEDUP = 1.5
+INTAKE_WINDOW_S = 0.02
+
+
+def _views(seconds: float) -> list:
+    """Four overlapping transcode-demanding views over the road clip
+    (stored codec is tvc-med, so every view decodes + re-encodes —
+    the shared work coalescing exists to amortize)."""
+    half = seconds / 2
+    return [
+        {"t": [0.0, half], "codec": "tvc-lo"},
+        {"t": [0.0, half], "codec": "tvc-lo"},           # exact duplicate
+        {"t": [half / 2, half + half / 2], "codec": "tvc-lo"},
+        {"t": [0.0, half], "codec": "tvc-hi"},
+    ]
+
+
+def _request(base: str, body: dict, tenant: str = "bench"):
+    req = urllib.request.Request(
+        base + "/v1/read", data=json.dumps(body).encode(),
+        headers={"X-VSS-Tenant": tenant}, method="POST",
+    )
+    try:
+        with urllib.request.urlopen(req) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read() or b"{}")
+
+
+def _serve_pass(service: VSSService, views: list, reqs_per_client: int):
+    """CLIENTS threads, each issuing its view sequence over the full
+    wire path (manifest + every segment body).  Returns (wall_seconds,
+    sorted per-request latencies)."""
+    barrier = threading.Barrier(CLIENTS)
+    lats: list = [[] for _ in range(CLIENTS)]
+    errors: list = []
+
+    def client(ci: int):
+        barrier.wait()
+        for r in range(reqs_per_client):
+            body = dict(views[(ci + r) % len(views)])
+            body["name"] = "road"
+            body["cache"] = False
+            t0 = time.perf_counter()
+            status, manifest = _request(service.url, body)
+            if status != 200:
+                errors.append((ci, r, status, manifest))
+                return
+            for seg in manifest["segments"]:
+                with urllib.request.urlopen(service.url + seg["url"]) as sr:
+                    data = sr.read()
+                if len(data) != seg["nbytes"]:
+                    errors.append((ci, r, "short segment", len(data)))
+                    return
+            lats[ci].append(time.perf_counter() - t0)
+
+    threads = [
+        threading.Thread(target=client, args=(i,)) for i in range(CLIENTS)
+    ]
+    with timer() as wall:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert not errors, f"serving pass failed: {errors[:3]}"
+    flat = sorted(lat for per in lats for lat in per)
+    assert len(flat) == CLIENTS * reqs_per_client
+    return wall[0], flat
+
+
+def _pctl(sorted_lats: list, q: float) -> float:
+    return sorted_lats[min(len(sorted_lats) - 1,
+                           max(0, round(q * len(sorted_lats)) - 1))]
+
+
+def run(scale: float = 1.0) -> list:
+    frames = max(60, int(240 * scale))
+    reqs_per_client = max(2, int(4 * scale))
+    clip = road(frames=frames, width=128, height=96)
+    seconds = frames / 30.0
+    views = _views(seconds)
+    rows: list = []
+
+    store = fresh_store()
+    try:
+        store.write("road", clip, fps=30.0, codec="tvc-med", gop_frames=15)
+        total = CLIENTS * reqs_per_client
+
+        # -- pass 1: coalesced serving ------------------------------------
+        reg_c = MetricsRegistry()
+        coalesced = VSSService(store, window_s=INTAKE_WINDOW_S,
+                               registry=reg_c)
+        try:
+            wall_c, lats_c = _serve_pass(coalesced, views, reqs_per_client)
+        finally:
+            coalesced.close()
+        batches = reg_c.value("vss_serve_batches_total")
+        rows.append(Row("fig27", "serve_coalesced_wall", wall_c, "s",
+                        f"{CLIENTS} clients x {reqs_per_client} reqs,"
+                        f" full wire path"))
+        rows.append(Row("fig27", "serve_coalesced_throughput",
+                        total / wall_c, "reads/s",
+                        f"{batches:.0f} joint batches for {total} reqs"))
+        rows.append(Row("fig27", "serve_coalesced_p50",
+                        _pctl(lats_c, 0.5) * 1000, "ms", ""))
+        rows.append(Row("fig27", "serve_coalesced_p99",
+                        _pctl(lats_c, 0.99) * 1000, "ms", ""))
+        rows.append(Row("fig27", "serve_coalesce_width",
+                        total / max(batches, 1), "reqs/batch",
+                        "mean requests per dispatched read_batch"))
+
+        # -- pass 2: per-request sequential control -----------------------
+        control = VSSService(store, window_s=0.0, max_batch=1,
+                             registry=MetricsRegistry())
+        try:
+            wall_s, lats_s = _serve_pass(control, views, reqs_per_client)
+        finally:
+            control.close()
+        rows.append(Row("fig27", "serve_sequential_wall", wall_s, "s",
+                        "window_s=0, max_batch=1: one read_batch per"
+                        " request"))
+        rows.append(Row("fig27", "serve_sequential_p99",
+                        _pctl(lats_s, 0.99) * 1000, "ms", ""))
+        speedup = wall_s / max(wall_c, 1e-9)
+        rows.append(Row("fig27", "serve_coalesce_speedup", speedup, "x",
+                        f"aggregate throughput, {CLIENTS} concurrent"
+                        f" clients"))
+        assert speedup >= MIN_COALESCE_SPEEDUP, (
+            f"coalesced serving must beat per-request sequential serving"
+            f" by >={MIN_COALESCE_SPEEDUP}x at {CLIENTS} concurrent"
+            f" clients, got {speedup:.2f}x"
+        )
+
+        # -- pass 3: overload honesty (deadline shedding) ------------------
+        reg_o = MetricsRegistry()
+        qos = VSSService(store, window_s=INTAKE_WINDOW_S, registry=reg_o)
+        try:
+            burst = CLIENTS
+            statuses = [None] * burst
+            barrier = threading.Barrier(burst)
+
+            def qclient(i):
+                body = {"name": "road", "t": [0.0, seconds / 2],
+                        "codec": "tvc-med", "cache": False}
+                if i < 2:
+                    body["deadline_ms"] = 0  # already expired at intake
+                barrier.wait()
+                t0 = time.perf_counter()
+                status, _ = _request(qos.url, body, tenant=f"t{i % 3}")
+                statuses[i] = (status, time.perf_counter() - t0)
+
+            threads = [
+                threading.Thread(target=qclient, args=(i,))
+                for i in range(burst)
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            shed = [s for s, _ in statuses if s == 503]
+            admitted = sorted(lat for s, lat in statuses if s == 200)
+            assert len(shed) == 2, (
+                f"exactly the 2 past-deadline requests must shed,"
+                f" got {len(shed)} 503s: {statuses}"
+            )
+            assert len(admitted) == burst - 2, statuses
+            admitted_p99 = _pctl(admitted, 0.99)
+            # the gate: shedding protects admitted work — its p99 must
+            # stay in the same regime as the unloaded coalesced pass
+            gate = max(2.0 * _pctl(lats_c, 0.99), _pctl(lats_c, 0.99) + 0.5)
+            assert admitted_p99 <= gate, (
+                f"admitted p99 {admitted_p99:.3f}s blew the gate"
+                f" {gate:.3f}s under shed load"
+            )
+            rows.append(Row("fig27", "serve_shed_503", float(len(shed)),
+                            "count", "past-deadline requests shed"))
+            rows.append(Row("fig27", "serve_admitted_p99",
+                            admitted_p99 * 1000, "ms",
+                            "p99 of admitted requests during shed burst"))
+            rows.append(Row(
+                "fig27", "serve_deadline_sheds_metric",
+                reg_o.value("vss_serve_shed_total",
+                            {"reason": "deadline"}),
+                "count", "shed counter on /metrics"))
+        finally:
+            qos.close()
+    finally:
+        store.close()
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller clip, same asserts")
+    ap.add_argument("--scale", type=float, default=None)
+    args = ap.parse_args()
+    scale = args.scale if args.scale is not None else (
+        0.5 if args.quick else 1.0
+    )
+    print("bench,name,value,unit,notes")
+    for row in run(scale):
+        print(row.csv())

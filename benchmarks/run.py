@@ -47,6 +47,7 @@ MODULES = (
     "fig24_ingest_pipeline",
     "fig25_replication",
     "fig26_remote",
+    "fig27_serving",
     "table2_joint_quality",
     "roofline",
 )

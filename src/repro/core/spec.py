@@ -100,6 +100,12 @@ class ReadSpec:
     # not change *what* is planned or returned — only the order work is
     # materialized in, so urgent requests see their results earliest.
     priority: int = 0
+    # Deadline budget in milliseconds, relative to batch submission.
+    # Within equal priority, ``read_batch`` materializes tighter
+    # deadlines first (None sorts last); the serving tier additionally
+    # sheds requests whose deadline expired before dispatch.  Like
+    # ``priority`` it never changes what is planned or returned.
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self):
         if not self.name or not isinstance(self.name, str):
@@ -134,6 +140,16 @@ class ReadSpec:
                 f"priority must be an integer, got {self.priority!r}"
             ) from None
         object.__setattr__(self, "priority", priority)
+        if self.deadline_ms is not None:
+            try:
+                deadline = float(self.deadline_ms)
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"deadline_ms must be a number, got {self.deadline_ms!r}"
+                ) from None
+            if not math.isfinite(deadline) or deadline < 0:
+                raise ValueError(f"bad deadline_ms {self.deadline_ms!r}")
+            object.__setattr__(self, "deadline_ms", deadline)
 
     # -- catalog-relative resolution ------------------------------------
     def resolve(self, original: PhysicalMeta) -> "ResolvedRead":

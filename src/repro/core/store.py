@@ -450,6 +450,25 @@ class VSS:
             "measured backend fetch seconds for executed plans")
         self._last_scrub: Optional[Dict] = None
         self._metrics_server: Optional[_storage.ObjectServer] = None
+        # write listeners: callables invoked with the logical video name
+        # whenever its stored state advances (a writer hands off a
+        # publish window, a writer closes, a drop).  The serving tier's
+        # manifest cache invalidates through this seam.
+        self._write_listeners: List = []
+
+    def on_write(self, fn) -> None:
+        """Register ``fn(name)`` to run when a logical video's stored
+        state changes (publish-window handoff, writer close, drop).
+        Listeners must be fast and must not raise — exceptions are
+        swallowed so a broken observer can never poison a write."""
+        self._write_listeners.append(fn)
+
+    def _notify_write(self, name: str) -> None:
+        for fn in list(self._write_listeners):
+            try:
+                fn(name)
+            except Exception:  # noqa: BLE001 - observers never gate writes
+                pass
 
     @property
     def ingest(self) -> _ingest.IngestPipeline:
@@ -665,16 +684,21 @@ class VSS:
             )
 
         # -- execute: duplicates share one materialization.  Within each
-        # video group, higher-priority specs materialize first (QoS
-        # hint: urgent requests see their results earliest); results
-        # stay order-preserving regardless.
+        # video group, higher-priority specs materialize first, and
+        # among equal priorities the tightest deadline goes first (QoS:
+        # urgent requests see their results earliest); results stay
+        # order-preserving regardless.
         first_pos: Dict[str, int] = {}
         for i, r in enumerate(resolved):
             first_pos.setdefault(r.name, i)
+        inf = float("inf")
         exec_order = sorted(
             range(len(specs)),
             key=lambda i: (
-                first_pos[resolved[i].name], -specs[i].priority, i
+                first_pos[resolved[i].name], -specs[i].priority,
+                specs[i].deadline_ms
+                if specs[i].deadline_ms is not None else inf,
+                i,
             ),
         )
         done: Dict[tuple, Tuple[Optional[np.ndarray], Optional[list]]] = {}
@@ -1487,6 +1511,7 @@ class VSS:
             self._ingest.barrier({name})
         for key in self.catalog.drop_logical(name):
             self.backend.delete(key)
+        self._notify_write(name)
 
     def calibrate_io(
         self, backends: Optional[Dict[str, _storage.StorageBackend]] = None,
@@ -1676,6 +1701,10 @@ class VSSWriter:
             raise
         self._next_frame = start
         self._bytes_written += window.nbytes
+        # the video's readable state is advancing (the pipeline indexes
+        # asynchronously, but readers barrier on this video before
+        # planning, so invalidating at handoff is always conservative)
+        self.store._notify_write(self.name)
 
     def close(self) -> PhysicalMeta:
         self._check_pipeline_error()
@@ -1697,6 +1726,7 @@ class VSSWriter:
             self.store.budget_multiple * max(self._bytes_written, 1)
         )
         self.store.catalog.set_budget(self.name, budget)
+        self.store._notify_write(self.name)
         return self.store.catalog.get_physical(self._pid)
 
 

@@ -1,2 +1,13 @@
 from repro.serving.pages import PagePool, PagePoolConfig  # noqa: F401
 from repro.serving.engine import ServingEngine, Request  # noqa: F401
+from repro.serving.coalesce import (  # noqa: F401
+    BatchCoalescer,
+    DeadlineExceeded,
+)
+from repro.serving.qos import (  # noqa: F401
+    AdmissionController,
+    Denial,
+    TokenBucket,
+)
+from repro.serving.signing import UrlSigner  # noqa: F401
+from repro.serving.service import VSSService, spec_from_json  # noqa: F401

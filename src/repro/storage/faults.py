@@ -49,6 +49,8 @@ class FaultInjectingBackend(StorageBackend):
         error_rate: float = 0.0,
         torn_write_rate: float = 0.0,
         latency: float = 0.0,
+        latency_spike: float = 0.0,
+        latency_spike_rate: float = 0.0,
         registry=None,
     ):
         if not 0.0 <= error_rate <= 1.0:
@@ -57,10 +59,22 @@ class FaultInjectingBackend(StorageBackend):
             raise ValueError(
                 f"torn_write_rate must be in [0,1], got {torn_write_rate}"
             )
+        if not 0.0 <= latency_spike_rate <= 1.0:
+            raise ValueError(
+                f"latency_spike_rate must be in [0,1],"
+                f" got {latency_spike_rate}"
+            )
         self.inner = inner
         self.error_rate = error_rate
         self.torn_write_rate = torn_write_rate
         self.latency = latency  # mean injected delay, seconds
+        # heavy-tail mode: a latency_spike_rate fraction of operations
+        # sleep a flat latency_spike seconds ON TOP of the uniform
+        # delay — the bimodal profile of a GC pause / slow replica /
+        # congested link, i.e. exactly the tail that request hedging
+        # (RemoteBackend.hedge_threshold) exists to cut
+        self.latency_spike = latency_spike
+        self.latency_spike_rate = latency_spike_rate
         self._rng = random.Random(seed)
         self._lock = threading.Lock()
         self._forced_failures = 0
@@ -120,6 +134,9 @@ class FaultInjectingBackend(StorageBackend):
                 self._rng.uniform(0.0, 2.0 * self.latency)
                 if self.latency > 0 else 0.0
             )
+            if (self.latency_spike_rate > 0
+                    and self._rng.random() < self.latency_spike_rate):
+                delay += self.latency_spike
             if self._forced_failures > 0:
                 self._forced_failures -= 1
                 fail = True

@@ -39,12 +39,15 @@ The handler serializes renames per destination key; the move itself is
 get+put+delete on the backing store, whose atomic per-object ``put``
 keeps readers of the destination on complete bytes.
 
-The server composes over any `StorageBackend` (default: a
-`LocalFSBackend` under ``--root``), which is also how `make_backend`'s
-plain ``remote`` spec self-hosts a loopback instance per store.
-Standalone (for benchmarks against a real network hop):
+The server composes over any `StorageBackend` (``--backend`` takes the
+full `make_backend` spec grammar; default: a `LocalFSBackend` under
+``--root``), which is also how `make_backend`'s plain ``remote`` spec
+self-hosts a loopback instance per store.  Standalone (for benchmarks
+against a real network hop):
 
     python -m repro.storage.httpserver --root /data/objects --port 8080
+    python -m repro.storage.httpserver --root /data/objects \
+        --backend replicated:3 --metrics
 """
 from __future__ import annotations
 
@@ -315,21 +318,35 @@ class ObjectServer:
 def main(argv=None) -> None:  # pragma: no cover - operational entry point
     import argparse
 
-    from repro.storage.localfs import LocalFSBackend
+    from repro.obs.registry import default_registry
+    from repro.storage import make_backend
 
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--root", required=True,
-                    help="directory for the backing LocalFSBackend")
+                    help="directory for the backing store's objects")
+    ap.add_argument(
+        "--backend", default="localfs",
+        help="make_backend spec for the backing store (e.g. 'localfs',"
+        " 'memory', 'sharded:8', 'tiered:sharded:4',"
+        " 'replicated:3:3:2'); default localfs",
+    )
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--metrics", action="store_true",
+                    help="also serve GET /metrics from the process-global"
+                    " registry")
     args = ap.parse_args(argv)
-    server = ObjectServer(LocalFSBackend(args.root),
-                          host=args.host, port=args.port)
-    print(f"serving {args.root} at {server.url}", flush=True)
+    registry = default_registry() if args.metrics else None
+    store = make_backend(args.backend, args.root, registry=registry)
+    server = ObjectServer(store, host=args.host, port=args.port,
+                          registry=registry)
+    print(f"serving {args.backend} under {args.root} at {server.url}",
+          flush=True)
     try:
         threading.Event().wait()
     except KeyboardInterrupt:
         server.close()
+        store.close()
 
 
 if __name__ == "__main__":  # pragma: no cover

@@ -35,6 +35,19 @@ Concurrency
   the pipelined ingest path gets one connection per publishing worker
   instead of serializing windows behind a single socket.
 
+Hedged GETs (tail-latency insurance)
+  With ``hedge_threshold`` set, a ``get`` that has not answered within
+  the threshold launches ONE duplicate request and the first response
+  wins — the classic tail-at-scale defense, safe because object GETs
+  are idempotent and every committed object is immutable.  A 404 from
+  either request is authoritative (the store speaking, not the
+  network) and short-circuits.  Hedges ride a dedicated executor so a
+  saturated ``batch_get`` fan-out can never deadlock against its own
+  hedges; ``vss_remote_hedges_total`` / ``vss_remote_hedge_wins_total``
+  count launches and races the duplicate actually won.  Off by default:
+  hedging trades duplicate load for p99, which is the serving tier's
+  call, not the storage layer's.
+
 ``RemoteBackend.self_hosted(root)`` bundles an in-process loopback
 `ObjectServer` over a `LocalFSBackend` under ``root`` — what the plain
 ``remote`` spec in `make_backend` builds, so the whole tier-1 suite and
@@ -51,7 +64,12 @@ import threading
 import time
 import urllib.parse
 import uuid
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import (
+    FIRST_COMPLETED,
+    ThreadPoolExecutor,
+    TimeoutError as FutureTimeout,
+    wait as wait_futures,
+)
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.storage.base import (
@@ -106,9 +124,14 @@ class RemoteBackend(StorageBackend):
         backoff_base: float = DEFAULT_BACKOFF_BASE,
         backoff_max: float = DEFAULT_BACKOFF_MAX,
         timeout: float = DEFAULT_TIMEOUT,
+        hedge_threshold: Optional[float] = None,
         registry=None,
         _owned_server=None,
     ):
+        if hedge_threshold is not None and hedge_threshold <= 0:
+            raise ValueError(
+                f"hedge_threshold must be positive, got {hedge_threshold}"
+            )
         parts = urllib.parse.urlsplit(url)
         if parts.scheme != "http" or not parts.hostname:
             raise ValueError(f"RemoteBackend needs an http:// url, got"
@@ -125,12 +148,14 @@ class RemoteBackend(StorageBackend):
         self.backoff_base = backoff_base
         self.backoff_max = backoff_max
         self.timeout = timeout
+        self.hedge_threshold = hedge_threshold
         self._server = _owned_server  # self-hosted loopback instance
         self._connections = max(1, int(connections))
         self._idle: List[http.client.HTTPConnection] = []
         self._lock = threading.Lock()
         self._counter = itertools.count()
         self._pool: Optional[ThreadPoolExecutor] = None
+        self._hedge_pool: Optional[ThreadPoolExecutor] = None
         # transport telemetry (repro.obs); `retries` stays readable as a
         # plain attribute (it is a thin view over the registry handle)
         from repro.obs.registry import default_registry
@@ -146,6 +171,12 @@ class RemoteBackend(StorageBackend):
             "vss_remote_pool_overflow_total",
             "connections closed on return because the pool was full"
             " (fan-out exceeded the configured pool size)")
+        self._c_hedges = reg.counter(
+            "vss_remote_hedges_total",
+            "duplicate GETs launched past the hedge threshold")
+        self._c_hedge_wins = reg.counter(
+            "vss_remote_hedge_wins_total",
+            "hedged GETs answered first by the duplicate request")
 
     @classmethod
     def self_hosted(cls, root: str, **kw) -> "RemoteBackend":
@@ -184,10 +215,32 @@ class RemoteBackend(StorageBackend):
                 )
             return self._pool
 
+    def _hedge_executor(self) -> ThreadPoolExecutor:
+        """Hedged GETs run on their own pool: ``batch_get`` saturating
+        the fan-out executor with gets that each wait on a nested
+        future would deadlock against itself."""
+        with self._lock:
+            if self._hedge_pool is None:
+                self._hedge_pool = ThreadPoolExecutor(
+                    max_workers=max(4, self._connections * 2),
+                    thread_name_prefix="vss-remote-hedge",
+                )
+            return self._hedge_pool
+
     @property
     def retries(self) -> int:
         """Transport retries performed (view over the registry counter)."""
         return int(self._c_retries.value)
+
+    @property
+    def hedges(self) -> int:
+        """Duplicate GETs launched (view over the registry counter)."""
+        return int(self._c_hedges.value)
+
+    @property
+    def hedge_wins(self) -> int:
+        """Hedged GETs the duplicate answered first."""
+        return int(self._c_hedge_wins.value)
 
     def _borrow(self) -> http.client.HTTPConnection:
         with self._lock:
@@ -281,12 +334,44 @@ class RemoteBackend(StorageBackend):
             raise RemoteError(f"rename {key!r} -> {r.status}")
 
     def get(self, key: str) -> bytes:
+        if self.hedge_threshold is None:
+            return self._get_once(key)
+        return self._hedged_get(key)
+
+    def _get_once(self, key: str) -> bytes:
         r = self._request("GET", self._opath(key))
         if r.status == 404:
             raise ObjectNotFound(key)
         if r.status != 200:
             raise RemoteError(f"GET {key!r} -> {r.status}")
         return r.data
+
+    def _hedged_get(self, key: str) -> bytes:
+        """First-response-wins duplicate GET once the primary is slower
+        than ``hedge_threshold``.  404 short-circuits (authoritative);
+        a transport failure on one request waits for the other, and the
+        primary's error is re-raised only when both lose."""
+        ex = self._hedge_executor()
+        primary = ex.submit(self._get_once, key)
+        try:
+            return primary.result(timeout=self.hedge_threshold)
+        except FutureTimeout:
+            pass  # slow primary: race a duplicate
+        self._c_hedges.inc()
+        pending = {primary, ex.submit(self._get_once, key)}
+        while pending:
+            done, pending = wait_futures(
+                pending, return_when=FIRST_COMPLETED
+            )
+            for fut in done:
+                exc = fut.exception()
+                if exc is None:
+                    if fut is not primary:
+                        self._c_hedge_wins.inc()
+                    return fut.result()
+                if isinstance(exc, ObjectNotFound):
+                    raise exc
+        raise primary.exception()  # both exhausted their retries
 
     def get_range(self, key: str, start: int, length: int) -> bytes:
         """Ranged GET (``Range: bytes=start-``): fetch ``length`` bytes
@@ -393,10 +478,13 @@ class RemoteBackend(StorageBackend):
         with self._lock:
             idle, self._idle = self._idle, []
             pool, self._pool = self._pool, None
+            hedge_pool, self._hedge_pool = self._hedge_pool, None
         for conn in idle:
             conn.close()
         if pool is not None:
             pool.shutdown(wait=False)
+        if hedge_pool is not None:
+            hedge_pool.shutdown(wait=False)
         if self._server is not None:
             self._server.close()
             self._server = None

@@ -451,3 +451,85 @@ except ImportError:  # deterministic sweep fallback (same invariant)
                 _drive(store, server.url, script)
             finally:
                 server.close()
+
+
+# ---------------------------------------------------------------------------
+# hedged GETs (tail-latency insurance)
+# ---------------------------------------------------------------------------
+
+def test_hedged_get_cuts_tail_latency(tmp_path):
+    """Under bimodal injected latency (occasional heavy spikes), a
+    hedged client's p99 beats the unhedged client's by a wide margin —
+    the duplicate request escapes the spike."""
+    import time as _time
+
+    from repro.storage.faults import FaultInjectingBackend
+
+    store = FaultInjectingBackend(
+        MemoryBackend(), seed=7, latency=0.002,
+        latency_spike=0.12, latency_spike_rate=0.1,
+    )
+    server = ObjectServer(store)
+    plain = RemoteBackend(server.url)
+    hedged = RemoteBackend(server.url, hedge_threshold=0.02)
+    try:
+        plain.put("k", b"x" * 4096)
+
+        def p99(backend, n=60):
+            lats = []
+            for _ in range(n):
+                t0 = _time.perf_counter()
+                assert backend.get("k") == b"x" * 4096
+                lats.append(_time.perf_counter() - t0)
+            lats.sort()
+            return lats[max(0, round(0.99 * n) - 1)]
+
+        plain_p99 = p99(plain)
+        hedged_p99 = p99(hedged)
+        assert hedged.hedges > 0, "spikes never crossed the threshold"
+        assert hedged.hedge_wins > 0, "the duplicate never won a race"
+        assert hedged_p99 < plain_p99 * 0.8, (
+            f"hedging did not cut p99: {hedged_p99:.3f}s vs"
+            f" {plain_p99:.3f}s"
+        )
+    finally:
+        plain.close()
+        hedged.close()
+        server.close()
+
+
+def test_hedged_get_miss_is_authoritative(served):
+    """A 404 is the store speaking, not the network: the hedged path
+    short-circuits it instead of waiting out the race."""
+    server, _rb, _store = served
+    hedged = RemoteBackend(server.url, hedge_threshold=0.01)
+    try:
+        with pytest.raises(ObjectNotFound):
+            hedged.get("never-written")
+        hedged.put("real", b"abc")
+        assert hedged.get("real") == b"abc"
+    finally:
+        hedged.close()
+
+
+def test_hedged_batch_get_does_not_deadlock(served):
+    """batch_get fan-out + nested hedge futures must ride separate
+    executors; saturating the fan-out pool used to be the deadlock
+    shape."""
+    server, _rb, _store = served
+    hedged = RemoteBackend(server.url, hedge_threshold=0.001,
+                           connections=2)
+    try:
+        items = [(f"k{i}", bytes([i]) * 64) for i in range(24)]
+        hedged.batch_put(items)
+        got = hedged.batch_get([k for k, _ in items])
+        assert got == [v for _, v in items]
+    finally:
+        hedged.close()
+
+
+def test_hedge_threshold_validation():
+    with pytest.raises(ValueError):
+        RemoteBackend("http://127.0.0.1:1", hedge_threshold=0.0)
+    with pytest.raises(ValueError):
+        RemoteBackend("http://127.0.0.1:1", hedge_threshold=-1.0)

@@ -1,0 +1,403 @@
+"""The HTTP serving tier: coalescing, QoS shedding, signed delivery,
+manifest caching, and the /metrics + /healthz surface.
+
+Each test runs a real `VSSService` on an ephemeral port and speaks
+stdlib HTTP at it — the same wire a VDBMS client would use."""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import codec
+from repro.obs.registry import MetricsRegistry
+from repro.serving.qos import (
+    REASON_QUEUE_DEPTH,
+    REASON_TENANT_RATE,
+    AdmissionController,
+    TokenBucket,
+)
+from repro.serving.service import VSSService, spec_from_json
+from repro.serving.signing import UrlSigner
+
+
+def _post(base, body, tenant="t0"):
+    req = urllib.request.Request(
+        base + "/v1/read", data=json.dumps(body).encode(),
+        headers={"X-VSS-Tenant": tenant,
+                 "Content-Type": "application/json"},
+        method="POST",
+    )
+    try:
+        with urllib.request.urlopen(req) as r:
+            return r.status, json.loads(r.read()), dict(r.headers)
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read() or b"{}"), dict(e.headers)
+
+
+def _get(base, path):
+    try:
+        with urllib.request.urlopen(base + path) as r:
+            return r.status, r.read(), dict(r.headers)
+    except urllib.error.HTTPError as e:
+        return e.code, e.read(), dict(e.headers)
+
+
+@pytest.fixture()
+def served(vss, clip):
+    vss.write("road", clip, fps=30.0, codec="tvc-med", gop_frames=15)
+    service = VSSService(vss, window_s=0.01)
+    yield service, vss
+    service.close()
+
+
+def _fetch_frames(base, manifest):
+    segs = []
+    for seg in manifest["segments"]:
+        status, data, _ = _get(base, seg["url"])
+        assert status == 200
+        assert len(data) == seg["nbytes"]
+        segs.append(data)
+    return np.concatenate(
+        [codec.decode_gop(codec.deserialize_gop(b)) for b in segs], axis=0
+    )
+
+
+# ---------------------------------------------------------------------------
+# control plane + data plane
+# ---------------------------------------------------------------------------
+
+def test_read_manifest_and_bit_exact_segments(served):
+    service, vss = served
+    status, manifest, _ = _post(
+        service.url, {"name": "road", "t": [0.0, 1.0], "codec": "tvc-med"}
+    )
+    assert status == 200
+    assert manifest["codec"] == "tvc-med"
+    assert manifest["segments"], "manifest must carry segment URLs"
+    got = _fetch_frames(service.url, manifest)
+    ref = vss.read("road", t=(0.0, 1.0), codec="tvc-med").frames
+    assert np.array_equal(got, ref)
+
+
+def test_rgb_read_serves_segments(served):
+    service, vss = served
+    status, manifest, _ = _post(
+        service.url, {"name": "road", "t": [0.0, 0.5], "codec": "rgb"}
+    )
+    assert status == 200
+    got = _fetch_frames(service.url, manifest)
+    assert np.array_equal(
+        got, vss.read("road", t=(0.0, 0.5), codec="rgb").frames
+    )
+
+
+def test_concurrent_requests_coalesce_into_fewer_batches(vss, clip):
+    vss.write("road", clip, fps=30.0, codec="tvc-med", gop_frames=15)
+    reg = MetricsRegistry()
+    service = VSSService(vss, window_s=0.25, registry=reg)
+    try:
+        n = 8
+        results = [None] * n
+
+        def worker(i):
+            results[i] = _post(
+                service.url,
+                {"name": "road", "t": [0.0, 1.0], "codec": "tvc-med"},
+            )
+
+        threads = [
+            threading.Thread(target=worker, args=(i,)) for i in range(n)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert all(r is not None and r[0] == 200 for r in results)
+        batches = reg.value("vss_serve_batches_total")
+        assert batches < n, f"no coalescing: {batches} batches for {n} reqs"
+        # identical concurrent requests: every client got the same bytes
+        first = _fetch_frames(service.url, results[0][1])
+        ref = vss.read("road", t=(0.0, 1.0), codec="tvc-med").frames
+        assert np.array_equal(first, ref)
+    finally:
+        service.close()
+
+
+def test_bad_spec_400_unknown_video_404(served):
+    service, _vss = served
+    assert _post(service.url, {"name": "road", "t": [5, 1]})[0] == 400
+    assert _post(service.url, {"name": "road", "bogus": 1})[0] == 400
+    assert _post(service.url, {"name": "ghost"})[0] == 404
+    assert _post(service.url, [1, 2, 3])[0] == 400
+
+
+def test_one_bad_spec_does_not_poison_coalesced_batchmates(vss, clip):
+    """An invalid-at-execution spec in a coalesced batch fails alone;
+    its batchmates still answer 200 via per-request fallback."""
+    vss.write("road", clip, fps=30.0, codec="tvc-med", gop_frames=15)
+    reg = MetricsRegistry()
+    service = VSSService(vss, window_s=0.25, registry=reg)
+    try:
+        bodies = [
+            {"name": "road", "t": [0.0, 1.0], "codec": "tvc-med"},
+            # resolves past the stored interval -> ValueError at resolve
+            {"name": "road", "t": [0.0, 10_000.0], "codec": "tvc-med"},
+            {"name": "road", "t": [1.0, 2.0], "codec": "tvc-med"},
+        ]
+        results = [None] * len(bodies)
+
+        def worker(i):
+            results[i] = _post(service.url, bodies[i])
+
+        threads = [
+            threading.Thread(target=worker, args=(i,))
+            for i in range(len(bodies))
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        codes = [r[0] for r in results]
+        assert codes[0] == 200 and codes[2] == 200
+        assert codes[1] == 400
+    finally:
+        service.close()
+
+
+# ---------------------------------------------------------------------------
+# QoS: shedding + deadlines
+# ---------------------------------------------------------------------------
+
+def test_tenant_rate_shed_with_retry_after(vss, clip):
+    vss.write("road", clip, fps=30.0, codec="tvc-med", gop_frames=15)
+    reg = MetricsRegistry()
+    service = VSSService(
+        vss,
+        admission=AdmissionController(
+            tenant_rate=0.5, tenant_burst=2.0, registry=reg
+        ),
+        registry=reg,
+    )
+    try:
+        body = {"name": "road", "t": [0.0, 0.5], "codec": "tvc-med"}
+        codes = [_post(service.url, body, tenant="greedy") for _ in range(4)]
+        assert [c[0] for c in codes[:2]] == [200, 200]
+        shed = codes[2]
+        assert shed[0] == 503
+        assert shed[2]["X-VSS-Shed-Reason"] == REASON_TENANT_RATE
+        assert int(shed[2]["Retry-After"]) >= 1
+        # another tenant's budget is untouched
+        assert _post(service.url, body, tenant="polite")[0] == 200
+        assert reg.value(
+            "vss_serve_shed_total", {"reason": REASON_TENANT_RATE}
+        ) >= 1
+    finally:
+        service.close()
+
+
+def test_past_deadline_request_is_shed(served):
+    service, _vss = served
+    status, body, headers = _post(
+        service.url,
+        {"name": "road", "t": [0.0, 0.5], "codec": "tvc-med",
+         "deadline_ms": 0},
+    )
+    assert status == 503
+    assert headers["X-VSS-Shed-Reason"] == "deadline"
+    assert body["reason"] == "deadline"
+    # a generous deadline sails through
+    assert _post(
+        service.url,
+        {"name": "road", "t": [0.0, 0.5], "codec": "tvc-med",
+         "deadline_ms": 60_000},
+    )[0] == 200
+
+
+def test_admission_controller_queue_and_bytes_limits():
+    reg = MetricsRegistry()
+    ac = AdmissionController(
+        queue_limit=2, inflight_bytes_limit=100, tenant_rate=1000.0,
+        tenant_burst=1000.0, registry=reg,
+    )
+    assert ac.admit() is None
+    assert ac.admit() is None
+    denial = ac.admit()
+    assert denial is not None and denial.reason == REASON_QUEUE_DEPTH
+    ac.release()
+    assert ac.admit() is None
+    ac.release()
+    ac.release()
+    ac.hold_bytes(150)
+    denial = ac.admit()
+    assert denial is not None and denial.reason == "inflight-bytes"
+    ac.drop_bytes(150)
+    assert ac.admit() is None
+    assert reg.value("vss_serve_queue_depth") == ac.in_flight
+
+
+def test_token_bucket_refills():
+    tb = TokenBucket(rate=100.0, burst=2.0)
+    assert tb.try_acquire() is None
+    assert tb.try_acquire() is None
+    retry = tb.try_acquire()
+    assert retry is not None and retry > 0
+    time.sleep(retry + 0.05)
+    assert tb.try_acquire() is None
+
+
+# ---------------------------------------------------------------------------
+# signed URLs
+# ---------------------------------------------------------------------------
+
+def test_signer_verify_reasons():
+    s = UrlSigner(secret=b"k", ttl_s=10.0)
+    url = s.sign("/v1/segment/abc/0", now=1000.0)
+    path, _, query = url.partition("?")
+    q = dict(p.split("=") for p in query.split("&"))
+    assert s.verify(path, q["exp"], q["sig"], now=1005.0) is None
+    assert s.verify(path, q["exp"], q["sig"], now=1011.0) == "expired"
+    assert s.verify(path, q["exp"], "0" * 64, now=1005.0) == "bad-signature"
+    assert s.verify(path, "soon", q["sig"]) == "bad-exp"
+    assert s.verify("/v1/segment/abc/1", q["exp"], q["sig"],
+                    now=1005.0) == "bad-signature"
+
+
+def test_tampered_and_expired_segment_urls_rejected(vss, clip):
+    vss.write("road", clip, fps=30.0, codec="tvc-med", gop_frames=15)
+    service = VSSService(vss)
+    try:
+        status, manifest, _ = _post(
+            service.url,
+            {"name": "road", "t": [0.0, 0.5], "codec": "tvc-med"},
+        )
+        assert status == 200
+        url = manifest["segments"][0]["url"]
+        assert _get(service.url, url)[0] == 200
+        # tampered signature
+        assert _get(service.url, url.replace("sig=", "sig=0"))[0] == 403
+        # no signature at all
+        assert _get(service.url, url.partition("?")[0])[0] == 403
+        # a token whose (validly signed) expiry already passed
+        path = url.partition("?")[0]
+        stale = service.signer.sign(
+            path, now=time.time() - service.signer.ttl_s - 60
+        )
+        assert _get(service.url, stale)[0] == 410
+    finally:
+        service.close()
+
+
+# ---------------------------------------------------------------------------
+# stored manifests + cache invalidation
+# ---------------------------------------------------------------------------
+
+def test_manifest_lists_gops_and_serves_signed_objects(served):
+    service, vss = served
+    status, body, _ = _get(service.url, "/v1/manifest/road")
+    manifest = json.loads(body)
+    assert status == 200
+    assert manifest["name"] == "road"
+    assert manifest["total_bytes"] > 0
+    gops = [g for p in manifest["physicals"] for g in p["gops"]]
+    assert gops
+    status, data, _ = _get(service.url, gops[0]["url"])
+    assert status == 200
+    enc = codec.deserialize_gop(data)
+    assert enc.nbytes == gops[0]["nbytes"] or len(data) > 0
+    # unknown name
+    assert _get(service.url, "/v1/manifest/ghost")[0] == 404
+
+
+def test_manifest_cache_hit_then_write_invalidates(vss, clip):
+    vss.write("road", clip, fps=30.0, codec="tvc-med", gop_frames=15)
+    reg = MetricsRegistry()
+    service = VSSService(vss, registry=reg)
+    try:
+        assert _get(service.url, "/v1/manifest/road")[0] == 200
+        assert _get(service.url, "/v1/manifest/road")[0] == 200
+        assert reg.value("vss_serve_manifest_cache_misses_total") == 1
+        assert reg.value("vss_serve_manifest_cache_hits_total") == 1
+        # a write to a DIFFERENT video leaves the entry alone
+        vss.write("other", clip[:15], fps=30.0, codec="rgb")
+        assert _get(service.url, "/v1/manifest/road")[0] == 200
+        assert reg.value("vss_serve_manifest_cache_hits_total") == 2
+        # dropping the video invalidates its entry and 404s afterwards
+        vss.drop("road")
+        assert reg.value("vss_serve_manifest_invalidations_total") >= 1
+        assert _get(service.url, "/v1/manifest/road")[0] == 404
+    finally:
+        service.close()
+
+
+def test_manifest_reflects_appends_after_invalidation(vss, clip):
+    vss.write("road", clip[:30], fps=30.0, codec="tvc-med", gop_frames=15)
+    service = VSSService(vss)
+    try:
+        first = json.loads(_get(service.url, "/v1/manifest/road")[1])
+        n_before = sum(
+            len(p["gops"]) for p in first["physicals"]
+        )
+        # stream more frames in: the writer close invalidates the entry
+        vss.drop("road")
+        vss.write("road", clip, fps=30.0, codec="tvc-med", gop_frames=15)
+        second = json.loads(_get(service.url, "/v1/manifest/road")[1])
+        n_after = sum(len(p["gops"]) for p in second["physicals"])
+        assert n_after > n_before
+    finally:
+        service.close()
+
+
+# ---------------------------------------------------------------------------
+# observability surface
+# ---------------------------------------------------------------------------
+
+def test_metrics_healthz_and_videos(served):
+    service, _vss = served
+    assert _post(
+        service.url, {"name": "road", "t": [0.0, 0.5], "codec": "tvc-med"}
+    )[0] == 200
+    status, body, headers = _get(service.url, "/metrics")
+    assert status == 200
+    assert headers["Content-Type"].startswith("text/plain")
+    text = body.decode()
+    for family in (
+        "vss_serve_requests_total",
+        "vss_serve_admitted_total",
+        "vss_serve_batches_total",
+        "vss_serve_coalesce_width",
+        "vss_serve_ttfb_seconds",
+        "vss_serve_e2e_seconds",
+        "vss_serve_queue_depth",
+        "vss_serve_tenant_tokens",
+    ):
+        assert family in text, f"missing metric family {family}"
+    status, body, _ = _get(service.url, "/healthz")
+    report = json.loads(body)
+    assert status == 200 and report["status"] == "ok"
+    assert report["serving"]["coalescer_alive"] is True
+    status, body, _ = _get(service.url, "/v1/videos")
+    assert status == 200 and json.loads(body) == ["road"]
+
+
+# ---------------------------------------------------------------------------
+# spec parsing
+# ---------------------------------------------------------------------------
+
+def test_spec_from_json():
+    spec = spec_from_json({
+        "name": "v", "t": [0, 2], "codec": "hevc", "priority": 3,
+        "deadline_ms": 50,
+    })
+    assert spec.name == "v" and spec.t == (0.0, 2.0)
+    assert spec.codec == "tvc-hi" and spec.priority == 3
+    assert spec.deadline_ms == 50.0
+    with pytest.raises(ValueError):
+        spec_from_json({"name": "v", "unknown_knob": 1})
+    with pytest.raises(ValueError):
+        spec_from_json({})
+    with pytest.raises(ValueError):
+        spec_from_json("just a string")
