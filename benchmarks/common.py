@@ -68,6 +68,14 @@ def pair(frames=24, width=192, height=108, overlap=0.5, seed=1,
     return _CACHE[key]
 
 
+def next_gop_magic(data: bytes, start: int) -> int:
+    """Offset of the next serialized-GOP magic (either blob version) at
+    or after ``start``; -1 when none remains."""
+    hits = [i for i in (data.find(b"TVC1", start), data.find(b"TVC2", start))
+            if i != -1]
+    return min(hits) if hits else -1
+
+
 def file_baseline_write(frames: np.ndarray, path: str) -> float:
     """Plain local-FS write of the encoded stream (the paper's baseline)."""
     from repro import codec
@@ -95,7 +103,7 @@ def file_baseline_read_all(path: str) -> tuple:
             header = json.loads(data[off + 8: off + 8 + hlen].decode())
             t_, h, w, c = header["shape"]
             # payload length is unknown without an index — scan for magic
-            nxt = data.find(b"TVC1", off + 8 + hlen)
+            nxt = next_gop_magic(data, off + 8 + hlen)
             end = nxt if nxt != -1 else len(data)
             enc = codec.deserialize_gop(data[off:end])
             out.append(codec.decode_gop(enc))

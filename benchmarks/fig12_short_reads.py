@@ -10,7 +10,7 @@ import tempfile
 
 import numpy as np
 
-from benchmarks.common import Row, fresh_store, road, timer
+from benchmarks.common import Row, fresh_store, next_gop_magic, road, timer
 from repro.core.cache import CachePolicy
 
 
@@ -72,7 +72,7 @@ def run(scale: float = 1.0) -> list:
             off = 0
             out = []
             while off < len(data):
-                nxt = data.find(b"TVC1", off + 4)
+                nxt = next_gop_magic(data, off + 4)
                 end = nxt if nxt != -1 else len(data)
                 out.append(codec.decode_gop(codec.deserialize_gop(data[off:end])))
                 off = end

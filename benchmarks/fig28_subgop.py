@@ -1,0 +1,168 @@
+"""Fig. 28 (beyond-paper) — sub-GOP reads: ranged I/O + tiled layout.
+
+Two claims, both from the ROI-workload tentpole:
+
+  * ranged I/O — a 3-frame read of a 30-frame GOP fetches only the
+    byte prefix those frames decode (the v2 per-frame offset table),
+    moving >= 40% fewer bytes than the whole object;
+  * tiled layout — a small-ROI read of a (3, 3)-tiled video fetches
+    and decodes only the covering tiles, finishing >= 2x faster than
+    the same read against the ordinary one-object-per-GOP layout.
+
+    PYTHONPATH=src python -m benchmarks.fig28_subgop [--quick]
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import Row, road, timer
+from repro.core.spec import WriteSpec
+from repro.core.store import VSS
+from repro.storage import MemoryBackend
+
+GOP_FRAMES = 30
+TRIM_FRAMES = 3
+TILES = (3, 3)
+TRIALS = 3
+
+
+class _CountingBackend:
+    """Counts every payload byte served (get/range/batch alike)."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.bytes_served = 0
+
+    def get(self, key):
+        data = self._inner.get(key)
+        self.bytes_served += len(data)
+        return data
+
+    def get_range(self, key, start, length):
+        data = self._inner.get_range(key, start, length)
+        self.bytes_served += len(data)
+        return data
+
+    def batch_get(self, keys):
+        out = self._inner.batch_get(keys)
+        self.bytes_served += sum(len(d) for d in out)
+        return out
+
+    def batch_get_ranges(self, reqs):
+        out = self._inner.batch_get_ranges(reqs)
+        self.bytes_served += sum(len(d) for d in out)
+        return out
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def _trim_bytes(frames) -> list:
+    """Bytes moved by 3-frame edge trims vs whole-GOP reads."""
+    root = tempfile.mkdtemp(prefix="vssbench28_trim_")
+    backend = _CountingBackend(MemoryBackend())
+    vss = VSS(root, backend=backend)
+    try:
+        vss.write("v", frames, fps=30.0, codec="tvc-hi",
+                  gop_frames=GOP_FRAMES)
+        n_gops = frames.shape[0] // GOP_FRAMES
+        starts = [g * GOP_FRAMES / 30.0 for g in range(n_gops)]
+        backend.bytes_served = 0
+        for t0 in starts:
+            vss.read("v", t=(t0, t0 + TRIM_FRAMES / 30.0), codec="rgb",
+                     cache=False)
+        ranged = backend.bytes_served
+        backend.bytes_served = 0
+        for t0 in starts:
+            vss.read("v", t=(t0, t0 + GOP_FRAMES / 30.0), codec="rgb",
+                     cache=False)
+        full = backend.bytes_served
+        reduction = 100.0 * (1.0 - ranged / max(full, 1))
+        return [
+            Row("fig28", "trim_ranged_bytes", float(ranged), "bytes",
+                f"{n_gops} x {TRIM_FRAMES}-frame trims"),
+            Row("fig28", "trim_full_bytes", float(full), "bytes",
+                f"{n_gops} whole {GOP_FRAMES}-frame GOPs"),
+            Row("fig28", "trim_byte_reduction", reduction, "%",
+                "bytes NOT moved by ranged trims (want >= 40)"),
+        ]
+    finally:
+        vss.close()
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def _roi_speedup(frames) -> list:
+    """Small-ROI read latency: tiled layout vs whole-frame objects."""
+    h, w = frames.shape[1], frames.shape[2]
+    roi = (0, 0, w // 4, h // 4)  # inside one (3, 3) tile
+    dur = frames.shape[0] / 30.0
+    windows = [
+        (t0, min(t0 + 1.0, dur))
+        for t0 in np.linspace(0.0, max(dur - 1.0, 0.0), 4)
+    ]
+    stores, roots = [], []
+    try:
+        for name, tiles in (("untiled", None), ("tiled", TILES)):
+            root = tempfile.mkdtemp(prefix=f"vssbench28_{name}_")
+            roots.append(root)
+            vss = VSS(root, backend=MemoryBackend())
+            wr = vss.writer_spec(WriteSpec(
+                name="v", fps=30.0, codec="tvc-hi",
+                gop_frames=GOP_FRAMES // 2, tiles=tiles,
+            ))
+            wr.append(frames)
+            wr.close()
+            stores.append((name, vss))
+        times = {name: [] for name, _ in stores}
+        for _ in range(TRIALS):  # interleave trials across layouts
+            for name, vss in stores:
+                with timer() as t:
+                    for t0, t1 in windows:
+                        vss.read("v", t=(t0, t1), roi=roi, codec="rgb",
+                                 cache=False)
+                times[name].append(t[0])
+        untiled, tiled = min(times["untiled"]), min(times["tiled"])
+        return [
+            Row("fig28", "roi_untiled", untiled, "s",
+                f"{len(windows)} 1s ROI reads, whole-frame objects"),
+            Row("fig28", "roi_tiled", tiled, "s",
+                f"{len(windows)} 1s ROI reads, {TILES} tiles"),
+            Row("fig28", "roi_speedup", untiled / tiled, "x",
+                "untiled / tiled (want >= 2.0)"),
+        ]
+    finally:
+        for _name, vss in stores:
+            vss.close()
+        for root in roots:
+            shutil.rmtree(root, ignore_errors=True)
+
+
+def run(scale: float = 1.0) -> list:
+    frames = road(max(int(240 * scale) // GOP_FRAMES, 2) * GOP_FRAMES)
+    return _trim_bytes(frames) + _roi_speedup(frames)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller clip, same claims")
+    ap.add_argument("--scale", type=float, default=None)
+    args = ap.parse_args()
+    scale = args.scale if args.scale is not None else (
+        0.5 if args.quick else 1.0
+    )
+    print("bench,name,value,unit,notes")
+    failed = []
+    for row in run(scale):
+        print(row.csv())
+        if row.name == "trim_byte_reduction" and row.value < 40.0:
+            failed.append("ranged trims moved less than 40% fewer bytes")
+        if row.name == "roi_speedup" and row.value < 2.0:
+            failed.append("tiled ROI reads below the 2x claim")
+    if failed:
+        raise SystemExit("fig28: " + "; ".join(failed))

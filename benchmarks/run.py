@@ -48,6 +48,7 @@ MODULES = (
     "fig25_replication",
     "fig26_remote",
     "fig27_serving",
+    "fig28_subgop",
     "table2_joint_quality",
     "roofline",
 )

@@ -56,6 +56,11 @@ REQUIRED_FAMILIES = (
     "vss_read_plan_seconds",
     "vss_plan_predicted_io_seconds_total",
     "vss_fault_injected_total",
+    # sub-GOP read path: ranged edge-trim fetches + tiled ROI reads
+    "vss_read_ranged_fetches_total",
+    "vss_read_ranged_bytes_saved_total",
+    "vss_tile_reads_total",
+    "vss_tile_fetches_total",
 )
 # vss_scrub_runs_total / vss_replica_* families are registered by
 # ReplicatedBackend only — the backend conformance suite covers them
@@ -79,6 +84,19 @@ def main() -> int:
             w.append(rng.randint(0, 255, (20, 48, 64, 3), np.uint8))
         w.close()
     vss.read("cam0", t=(0.0, 1.0), cache=False)
+    # sub-GOP paths: a 3-frame edge trim (ranged fetch) and a tiled
+    # ROI read (covering-tile fetch) must tick their counter families
+    vss.read("cam0", t=(0.0, 0.1), cache=False)
+    from repro.core.spec import WriteSpec
+    wt = vss.writer_spec(WriteSpec(name="cam2", fps=30.0, gop_frames=10,
+                                   tiles=(2, 2)))
+    wt.append(rng.randint(0, 255, (20, 48, 64, 3), np.uint8))
+    wt.close()
+    vss.read("cam2", t=(0.0, 0.5), roi=(0, 0, 24, 16), cache=False)
+    assert reg.value("vss_read_ranged_fetches_total") >= 1, \
+        "edge trim did not take the ranged path"
+    assert reg.value("vss_tile_fetches_total") >= 1, \
+        "tiled ROI read fetched no tile objects"
     vss.read_batch([
         ReadSpec(name="cam0", t=(0.0, 1.5), cache=False),
         ReadSpec(name="cam1", t=(0.5, 2.0), cache=False),

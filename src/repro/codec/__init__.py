@@ -1,5 +1,6 @@
 from repro.codec.tvc import (  # noqa: F401
     CODEC_ALIASES,
+    HEADER_PROBE_BYTES,
     TIERS,
     EncodedGOP,
     Tier,
@@ -8,6 +9,8 @@ from repro.codec.tvc import (  # noqa: F401
     deserialize_gop,
     encode_gop,
     is_compressed_codec,
+    parse_gop_header,
+    prefix_gop,
     serialize_gop,
     transcode_gop,
 )

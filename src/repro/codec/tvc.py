@@ -100,7 +100,13 @@ class EncodedGOP:
 
     codec: str  # canonical codec name
     shape: Tuple[int, int, int, int]  # (T, H, W, C)
-    payload: bytes  # zstd frame: iframe bytes ++ residual bytes (TVC) / raw (RGB)
+    payload: bytes  # per-frame zstd chunks (TVC, see offsets) / raw (RGB)
+    # cumulative payload byte offsets of the T per-frame chunks (unit 0 =
+    # the compressed I-frame, unit i = frame i's compressed residual), so
+    # offsets[i] .. offsets[i+1] brackets frame i and a payload *prefix*
+    # [0, offsets[hi]) decodes frames [0, hi).  None for RGB (offsets are
+    # analytic: i*H*W*C) and for legacy single-stream TVC1 payloads.
+    offsets: Optional[Tuple[int, ...]] = None
 
     @property
     def num_frames(self) -> int:
@@ -169,8 +175,58 @@ def encode_gop(
         )
         iframe = np.asarray(ifr, dtype=np.float32)
         resid = np.asarray(res).astype(tier.resid_dtype)
-    raw = iframe.astype(np.uint8).tobytes() + resid.tobytes()
-    return EncodedGOP(codec, (t, h, w, c), _zstd(raw, tier.zstd_level))
+    # one independently-compressed chunk per frame (I-frame, then each
+    # residual): a payload prefix [0, offsets[hi]) decodes frames
+    # [0, hi) without touching — or even fetching — the rest
+    return _chunked_gop(codec, (t, h, w, c),
+                        iframe.astype(np.uint8), resid, tier)
+
+
+def _chunked_gop(
+    codec: str,
+    shape: Tuple[int, int, int, int],
+    iframe_u8: np.ndarray,
+    resid: np.ndarray,
+    tier: Tier,
+) -> EncodedGOP:
+    chunks = [_zstd(iframe_u8.tobytes(), tier.zstd_level)]
+    chunks.extend(
+        _zstd(resid[i].tobytes(), tier.zstd_level)
+        for i in range(resid.shape[0])
+    )
+    offsets = [0]
+    for ch in chunks:
+        offsets.append(offsets[-1] + len(ch))
+    return EncodedGOP(codec, shape, b"".join(chunks), tuple(offsets))
+
+
+def _raw_payload(enc: EncodedGOP) -> bytes:
+    """Decompressed ``iframe_u8 ++ residuals`` bytes for a TVC GOP,
+    whatever its payload format (chunked v2 or legacy single-stream)."""
+    if enc.offsets is not None:
+        off = enc.offsets
+        return b"".join(
+            _unzstd(enc.payload[off[i]:off[i + 1]])
+            for i in range(len(off) - 1)
+        )
+    return _unzstd(enc.payload)
+
+
+def prefix_gop(enc: EncodedGOP, hi: int) -> EncodedGOP:
+    """The sub-GOP holding frames [0, hi) of ``enc``, sliced without any
+    decode work.  Requires a random-access payload (RGB, or a chunked
+    TVC payload with offsets); raises ValueError otherwise."""
+    t, h, w, c = enc.shape
+    if not 0 < hi <= t:
+        raise ValueError(f"prefix [0,{hi}) outside GOP of {t} frames")
+    if hi == t:
+        return enc
+    if enc.codec == RGB:
+        return EncodedGOP(RGB, (hi, h, w, c), enc.payload[: hi * h * w * c])
+    if enc.offsets is None:
+        raise ValueError("legacy single-stream payload has no offsets")
+    return EncodedGOP(enc.codec, (hi, h, w, c),
+                      enc.payload[: enc.offsets[hi]], enc.offsets[: hi + 1])
 
 
 def decode_gop(
@@ -183,7 +239,7 @@ def decode_gop(
     if enc.codec == RGB:
         return np.frombuffer(enc.payload, np.uint8).reshape(t, h, w, c).copy()
     tier = TIERS[enc.codec]
-    raw = _unzstd(enc.payload)
+    raw = _raw_payload(enc)
     isz = h * w * c
     # payload is channel-planar, exactly as encoded: iframe (C,H,W) uint8
     # followed by residuals (T-1,C,H,W)
@@ -231,7 +287,7 @@ def transcode_gop(
     if fused:
         tin = TIERS[enc.codec]
         tout = TIERS[codec]
-        raw = _unzstd(enc.payload)
+        raw = _raw_payload(enc)
         isz = h * w * c
         iframe = np.frombuffer(raw[:isz], np.uint8).reshape(c, h, w).astype(np.float32)
         resid = (
@@ -247,10 +303,8 @@ def transcode_gop(
         oh, ow = h // f, w // f
         iframe_out = np.asarray(io, np.float32)
         resid_out = np.asarray(ro).astype(tout.resid_dtype)
-        raw_out = iframe_out.astype(np.uint8).tobytes() + resid_out.tobytes()
-        return EncodedGOP(
-            codec, (t, oh, ow, c), _zstd(raw_out, tout.zstd_level)
-        )
+        return _chunked_gop(codec, (t, oh, ow, c),
+                            iframe_out.astype(np.uint8), resid_out, tout)
     frames = decode_gop(enc, use_pallas=use_pallas)
     if f > 1:
         planar = ops.to_planar(jnp.asarray(frames))
@@ -264,20 +318,61 @@ def transcode_gop(
 # --------------------------------------------------------------------------
 # byte-level (de)serialization — one GOP per storage object, as in §2
 # --------------------------------------------------------------------------
+#
+# Blob formats (both readable forever):
+#   TVC1: magic ++ hlen(u32le) ++ json{"codec","shape"} ++ payload —
+#         payload is raw RGB bytes or ONE compressed stream (legacy).
+#   TVC2: same framing, header additionally carries "offsets" (the
+#         cumulative per-frame chunk offsets, length T+1) and the
+#         payload is the concatenation of T independently-compressed
+#         chunks — the byte index that makes ranged sub-GOP reads pay
+#         only for the frames they decode.
+# RGB GOPs keep writing TVC1: their frame offsets are analytic (i*H*W*C
+# from the shape), so the header needs no table for random access.
 
 _MAGIC = b"TVC1"
+_MAGIC_V2 = b"TVC2"
+_MAGICS = (_MAGIC, _MAGIC_V2)
+
+# one storage read of this size always covers magic + header for any
+# plausible GOP (a T=600 offset table is < 5 KiB of JSON)
+HEADER_PROBE_BYTES = 8192
 
 
 def serialize_gop(enc: EncodedGOP) -> bytes:
-    header = json.dumps({"codec": enc.codec, "shape": enc.shape}).encode()
-    return _MAGIC + len(header).to_bytes(4, "little") + header + enc.payload
+    meta = {"codec": enc.codec, "shape": enc.shape}
+    if enc.codec != RGB and enc.offsets is not None:
+        meta["offsets"] = list(enc.offsets)
+        magic = _MAGIC_V2
+    else:
+        magic = _MAGIC
+    header = json.dumps(meta).encode()
+    return magic + len(header).to_bytes(4, "little") + header + enc.payload
+
+
+def parse_gop_header(data: bytes):
+    """Parse the blob header from a *prefix* of a serialized GOP.
+
+    Returns ``(codec, shape, offsets, payload_start)`` — ``offsets`` is
+    None for legacy/RGB blobs.  Raises ValueError when ``data`` is not a
+    TVC blob or is too short to hold the whole header."""
+    if data[:4] not in _MAGICS:
+        raise ValueError("not a TVC GOP object")
+    if len(data) < 8:
+        raise ValueError("truncated TVC header")
+    hlen = int.from_bytes(data[4:8], "little")
+    if len(data) < 8 + hlen:
+        raise ValueError("truncated TVC header")
+    header = json.loads(data[8 : 8 + hlen].decode())
+    offsets = header.get("offsets")
+    return (
+        header["codec"],
+        tuple(header["shape"]),
+        tuple(offsets) if offsets is not None else None,
+        8 + hlen,
+    )
 
 
 def deserialize_gop(data: bytes) -> EncodedGOP:
-    if data[:4] != _MAGIC:
-        raise ValueError("not a TVC GOP object")
-    hlen = int.from_bytes(data[4:8], "little")
-    header = json.loads(data[8 : 8 + hlen].decode())
-    return EncodedGOP(
-        header["codec"], tuple(header["shape"]), data[8 + hlen :]
-    )
+    codec, shape, offsets, start = parse_gop_header(data)
+    return EncodedGOP(codec, shape, data[start:], offsets)

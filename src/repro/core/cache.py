@@ -21,7 +21,7 @@ import dataclasses
 from typing import Dict, Iterable, List, Optional
 
 from repro.core.catalog import Catalog
-from repro.core.types import GopMeta, PhysicalMeta, mse_to_psnr
+from repro.core.types import GopMeta, PhysicalMeta, mse_to_psnr, tile_keys
 
 INF = float("inf")
 
@@ -191,5 +191,14 @@ class CacheManager:
                 for seg in rec.get("segments", []):
                     for key in seg["paths"].values():
                         self.backend.delete(key)
+            return
+        try:
+            p = self.catalog.get_physical(g.physical_id)
+        except KeyError:
+            p = None
+        if p is not None and p.tiles != (1, 1):
+            # a tiled GOP is rows*cols objects under one catalog path
+            for key in tile_keys(g.path, p.tiles):
+                self.backend.delete(key)
             return
         self.backend.delete(g.path)

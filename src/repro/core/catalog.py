@@ -16,7 +16,7 @@ import threading
 import time
 from typing import List, Optional, Sequence, Tuple
 
-from repro.core.types import Box, GopMeta, PhysicalMeta
+from repro.core.types import Box, GopMeta, PhysicalMeta, tile_keys
 
 _SCHEMA = """
 CREATE TABLE IF NOT EXISTS logical (
@@ -35,7 +35,9 @@ CREATE TABLE IF NOT EXISTS physical (
     mse_bound REAL,
     parent_is_original INTEGER,
     is_original INTEGER,
-    created REAL
+    created REAL,
+    tiles_r INTEGER DEFAULT 1,      -- tiled layout: tile grid rows
+    tiles_c INTEGER DEFAULT 1       -- tiled layout: tile grid cols
 );
 CREATE INDEX IF NOT EXISTS physical_logical ON physical(logical);
 CREATE TABLE IF NOT EXISTS gop (
@@ -48,7 +50,8 @@ CREATE TABLE IF NOT EXISTS gop (
     path TEXT,
     zwrapped INTEGER DEFAULT 0,
     lru_seq INTEGER DEFAULT 0,
-    joint_ref INTEGER
+    joint_ref INTEGER,
+    tile_sizes TEXT                 -- JSON per-tile byte sizes, row-major
 );
 CREATE INDEX IF NOT EXISTS gop_physical ON gop(physical_id, start_frame);
 CREATE TABLE IF NOT EXISTS joint (
@@ -72,12 +75,14 @@ def _physical_from_row(r) -> PhysicalMeta:
         codec=r[5], roi=(r[6], r[7], r[8], r[9]), t_start=r[10], t_end=r[11],
         mse_bound=r[12], parent_is_original=bool(r[13]),
         is_original=bool(r[14]), created=r[15],
+        tiles=(r[16] or 1, r[17] or 1),
     )
 
 
 _PHYS_COLS = (
     "id, logical, width, height, fps, codec, roi_x0, roi_y0, roi_x1, roi_y1,"
-    " t_start, t_end, mse_bound, parent_is_original, is_original, created"
+    " t_start, t_end, mse_bound, parent_is_original, is_original, created,"
+    " tiles_r, tiles_c"
 )
 
 
@@ -86,12 +91,22 @@ def _gop_from_row(r) -> GopMeta:
         gop_id=r[0], physical_id=r[1], index=r[2], start_frame=r[3],
         num_frames=r[4], nbytes=r[5], path=r[6], zwrapped=bool(r[7]),
         lru_seq=r[8], joint_ref=r[9],
+        tile_sizes=tuple(json.loads(r[10])) if r[10] else None,
     )
 
 
 _GOP_COLS = (
     "id, physical_id, idx, start_frame, num_frames, nbytes, path, zwrapped,"
-    " lru_seq, joint_ref"
+    " lru_seq, joint_ref, tile_sizes"
+)
+
+# columns added after the first shipped schema; CREATE TABLE IF NOT
+# EXISTS won't grow an existing catalog, so each is applied as a
+# best-effort ALTER (a duplicate-column error means already migrated)
+_MIGRATIONS = (
+    "ALTER TABLE physical ADD COLUMN tiles_r INTEGER DEFAULT 1",
+    "ALTER TABLE physical ADD COLUMN tiles_c INTEGER DEFAULT 1",
+    "ALTER TABLE gop ADD COLUMN tile_sizes TEXT",
 )
 
 
@@ -101,6 +116,11 @@ class Catalog:
         self._lock = threading.RLock()
         with self._lock:
             self._conn.executescript(_SCHEMA)
+            for stmt in _MIGRATIONS:
+                try:
+                    self._conn.execute(stmt)
+                except sqlite3.OperationalError:
+                    pass  # column already exists
             self._conn.commit()
 
     # -- logical ---------------------------------------------------------
@@ -139,14 +159,24 @@ class Catalog:
         joint pair keeps reading through the shared pieces."""
         with self._lock:
             rows = self._conn.execute(
-                "SELECT g.id, g.path, g.joint_ref FROM gop g JOIN physical p"
+                "SELECT g.id, g.path, g.joint_ref, p.tiles_r, p.tiles_c"
+                " FROM gop g JOIN physical p"
                 " ON g.physical_id = p.id WHERE p.logical=?",
                 (name,),
             ).fetchall()
             dropped_ids = {r[0] for r in rows}
             # joint-ref GOPs own no object of their own (the payload
-            # lives in the joint record's segment objects)
-            paths = [r[1] for r in rows if r[2] is None]
+            # lives in the joint record's segment objects); tiled GOPs
+            # own one object per tile
+            paths = []
+            for r in rows:
+                if r[2] is not None:
+                    continue
+                tiles = (r[3] or 1, r[4] or 1)
+                if tiles == (1, 1):
+                    paths.append(r[1])
+                else:
+                    paths.extend(tile_keys(r[1], tiles))
             for jid in {r[2] for r in rows if r[2] is not None}:
                 refs = {
                     r[0]
@@ -237,16 +267,17 @@ class Catalog:
         self, logical: str, width: int, height: int, fps: float, codec: str,
         roi: Box, t_start: float, t_end: float, mse_bound: float,
         parent_is_original: bool, is_original: bool,
+        tiles: Tuple[int, int] = (1, 1),
     ) -> int:
         with self._lock:
             cur = self._conn.execute(
                 "INSERT INTO physical(logical, width, height, fps, codec,"
                 " roi_x0, roi_y0, roi_x1, roi_y1, t_start, t_end, mse_bound,"
-                " parent_is_original, is_original, created)"
-                " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
+                " parent_is_original, is_original, created, tiles_r, tiles_c)"
+                " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
                 (logical, width, height, fps, codec, *roi, t_start, t_end,
                  mse_bound, int(parent_is_original), int(is_original),
-                 time.time()),
+                 time.time(), int(tiles[0]), int(tiles[1])),
             )
             self._conn.commit()
             return cur.lastrowid
@@ -318,26 +349,32 @@ class Catalog:
         batched admission/ingest paths (`backend.batch_put` publishes the
         objects first; these rows index them afterwards).  Each row is
         (physical_id, index, start_frame, num_frames, nbytes, path,
-        lru_seq); returns the new GOP ids in order.  The ingest
-        pipeline's publish windows pass ``return_ids=False`` to take the
-        ``executemany`` fast path (one prepared statement for the whole
-        window, no per-row id round-trip)."""
+        lru_seq) — with an optional 8th element, the JSON-encoded
+        per-tile byte sizes for GOPs of a tiled physical video; returns
+        the new GOP ids in order.  The ingest pipeline's publish windows
+        pass ``return_ids=False`` to take the ``executemany`` fast path
+        (one prepared statement for the whole window, no per-row id
+        round-trip)."""
+        norm = [
+            tuple(r) if len(r) == 8 else tuple(r) + (None,) for r in rows
+        ]
         with self._lock:
             if not return_ids:
                 self._conn.executemany(
                     "INSERT INTO gop(physical_id, idx, start_frame,"
-                    " num_frames, nbytes, path, lru_seq)"
-                    " VALUES (?,?,?,?,?,?,?)",
-                    list(rows),
+                    " num_frames, nbytes, path, lru_seq, tile_sizes)"
+                    " VALUES (?,?,?,?,?,?,?,?)",
+                    norm,
                 )
                 self._conn.commit()
                 return []
             ids: List[int] = []
-            for (pid, idx, start, nframes, nbytes, path, lru_seq) in rows:
+            for row in norm:
                 cur = self._conn.execute(
                     "INSERT INTO gop(physical_id, idx, start_frame,"
-                    " num_frames, nbytes, path, lru_seq) VALUES (?,?,?,?,?,?,?)",
-                    (pid, idx, start, nframes, nbytes, path, lru_seq),
+                    " num_frames, nbytes, path, lru_seq, tile_sizes)"
+                    " VALUES (?,?,?,?,?,?,?,?)",
+                    row,
                 )
                 ids.append(cur.lastrowid)
             self._conn.commit()
@@ -380,7 +417,7 @@ class Catalog:
 
     def update_gop(self, gop_id: int, **fields) -> None:
         cols = {"nbytes", "path", "zwrapped", "lru_seq", "joint_ref",
-                "num_frames", "start_frame", "idx"}
+                "num_frames", "start_frame", "idx", "tile_sizes"}
         sets, vals = [], []
         for k, v in fields.items():
             if k not in cols:
@@ -440,6 +477,15 @@ class Catalog:
             return self._conn.execute(
                 "SELECT 1 FROM gop LIMIT 1"
             ).fetchone() is not None
+
+    def all_physicals(self) -> List[PhysicalMeta]:
+        """Every physical video across every logical (scavenger — it
+        needs each GOP row's tile geometry to resolve object keys)."""
+        with self._lock:
+            rows = self._conn.execute(
+                f"SELECT {_PHYS_COLS} FROM physical"
+            ).fetchall()
+        return [_physical_from_row(r) for r in rows]
 
     def all_gops(self) -> List[GopMeta]:
         """Every GOP row across every logical video (startup scavenger)."""

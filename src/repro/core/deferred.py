@@ -91,7 +91,9 @@ class DeferredCompressor:
     def _raw_gops(self, logical: str) -> List[GopMeta]:
         out = []
         for p in self.catalog.physicals_for(logical):
-            if p.codec != "rgb":
+            if p.codec != "rgb" or p.tiles != (1, 1):
+                # tiled GOPs are many objects under one catalog path;
+                # the single-object zstd wrap does not apply to them
                 continue
             out.extend(
                 g for g in self.catalog.gops_for(p.physical_id)

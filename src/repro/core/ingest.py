@@ -68,12 +68,15 @@ class PublishWindow:
     ``items`` are (object key, serialized payload) pairs for
     ``backend.batch_put``; ``rows`` are (physical_id, idx, start_frame,
     num_frames, nbytes, key) tuples — the LRU tick is stamped at index
-    time.  ``t_end`` is where this window pushes the physical video's
-    prefix-visibility horizon once indexed."""
+    time — with an optional trailing JSON tile-size list for GOPs of a
+    tiled physical video (whose window carries one item per tile but
+    still indexes one row per GOP).  ``t_end`` is where this window
+    pushes the physical video's prefix-visibility horizon once
+    indexed."""
 
     pid: int
     items: List[Tuple[str, bytes]]
-    rows: List[Tuple[int, int, int, int, int, str]]
+    rows: List[tuple]
     t_end: float
 
     @property
@@ -100,8 +103,7 @@ def publish_window(backend, catalog, window: PublishWindow) -> None:
     backend.ensure_durable([key for key, _data in window.items])
     tick = catalog.lru_clock()
     catalog.add_gops(
-        [(pid, idx, start, nframes, nbytes, key, tick)
-         for (pid, idx, start, nframes, nbytes, key) in window.rows],
+        [tuple(row[:6]) + (tick,) + tuple(row[6:]) for row in window.rows],
         return_ids=False,
     )
     catalog.extend_physical_time(window.pid, window.t_end)

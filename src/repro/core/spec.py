@@ -228,11 +228,27 @@ class WriteSpec:
     gop_frames: Optional[int] = None
     budget_bytes: Optional[int] = None
     t_start: float = 0.0
+    # tiled physical layout: split each GOP into (rows, cols)
+    # independently-encoded tile objects so ROI reads fetch and decode
+    # only the tiles covering their box.  None / (1, 1) = untiled.
+    tiles: Optional[Tuple[int, int]] = None
 
     def __post_init__(self):
         if not self.name or not isinstance(self.name, str):
             raise ValueError(f"bad logical video name {self.name!r}")
         object.__setattr__(self, "codec", canonical_codec(self.codec))
+        if self.tiles is not None:
+            try:
+                tr, tc = int(self.tiles[0]), int(self.tiles[1])
+            except (TypeError, ValueError, IndexError):
+                raise ValueError(
+                    f"tiles must be a (rows, cols) pair, got {self.tiles!r}"
+                ) from None
+            if tr < 1 or tc < 1:
+                raise ValueError(f"bad tile grid {self.tiles!r}")
+            object.__setattr__(
+                self, "tiles", None if (tr, tc) == (1, 1) else (tr, tc)
+            )
         fps = float(self.fps)
         if not math.isfinite(fps) or fps <= 0:
             raise ValueError(f"non-positive fps {self.fps!r}")

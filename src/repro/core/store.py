@@ -42,6 +42,7 @@ transparency as an actually swappable layer.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import threading
 import time
@@ -78,11 +79,19 @@ from repro.core.types import (
     PhysicalMeta,
     chain_mse_bound,
     full_roi,
+    tile_bounds,
+    tile_key,
+    tiles_covering,
 )
 
 DEFAULT_BUDGET_MULTIPLE = 10.0  # §4 administrator default
 BULK_WRITE_BATCH_GOPS = 8  # GOPs per batch_put in the non-streaming path
 _EPS = 1e-9
+# ranged sub-GOP reads: below this object size a second round-trip costs
+# more than the bytes it saves, and above this kept-fraction most of the
+# object moves anyway — fall back to the plain full-object fetch
+MIN_RANGED_BYTES = 4096
+RANGED_HI_FRACTION = 0.75
 
 
 @dataclasses.dataclass
@@ -250,6 +259,17 @@ class _BatchIO:
             return [got[k] for k in keys]
         self.prefetch(keys)
         return [self.blobs[k] for k in keys]
+
+    def get_range(self, key: str, start: int, length: int) -> bytes:
+        """Ranged fetch with the same telemetry as ``get``.  Partial
+        bytes are never cached in ``blobs`` — a later full read of the
+        key must not alias a truncated payload."""
+        t0 = time.perf_counter()
+        data = self.backend.get_range(key, start, length)
+        self.fetch_seconds += time.perf_counter() - t0
+        self.objects_fetched += 1
+        self.bytes_fetched += len(data)
+        return data
 
 
 @dataclasses.dataclass(frozen=True)
@@ -448,6 +468,19 @@ class VSS:
         self._m_actual_io = reg.counter(
             "vss_plan_actual_io_seconds_total",
             "measured backend fetch seconds for executed plans")
+        self._m_ranged_fetches = reg.counter(
+            "vss_read_ranged_fetches_total",
+            "sub-GOP ranged fetches issued for edge-GOP trims")
+        self._m_ranged_saved = reg.counter(
+            "vss_read_ranged_bytes_saved_total",
+            "bytes NOT moved because an edge-GOP trim fetched only the"
+            " prefix it decodes")
+        self._m_tile_reads = reg.counter(
+            "vss_tile_reads_total",
+            "tiled-physical reads that planned a strict tile subset")
+        self._m_tile_fetches = reg.counter(
+            "vss_tile_fetches_total",
+            "tile objects fetched by the read path")
         self._last_scrub: Optional[Dict] = None
         self._metrics_server: Optional[_storage.ObjectServer] = None
         # write listeners: callables invoked with the logical video name
@@ -945,13 +978,16 @@ class VSS:
     def _passthrough_ok(self, p: PhysicalMeta, out_codec, out_fps, scale_to,
                         roi) -> bool:
         """Encoded GOPs can be returned verbatim: same codec, same
-        sampling density, same fps, identical spatial extent."""
+        sampling density, same fps, identical spatial extent, and an
+        untiled layout (tile objects must be stitched, never returned
+        as-is)."""
         return (
             p.codec == out_codec
             and p.codec != "rgb"
             and p.fps == out_fps
             and abs(p.scale - scale_to) < 1e-9
             and tuple(p.roi) == tuple(roi)
+            and p.tiles == (1, 1)
         )
 
     def _build_joint_problem(
@@ -1011,6 +1047,24 @@ class VSS:
         p = run.physical
         frames = max(1, int(round((b - a) * p.fps)))
         ppf = p.width * p.height
+        # tiled layout: an ROI read touches only the tiles covering its
+        # box, so both the decode work and the fetched bytes scale with
+        # the covered region instead of the full frame — priced here so
+        # a tiled fragment competes like any other candidate
+        tile_cover: Optional[List[int]] = None
+        n_tiles = 1
+        if p.tiles != (1, 1):
+            rows, cols = tiles_covering(
+                p.tiles, p.width, p.height, self._local_box(p, roi)
+            )
+            tile_cover = [r * p.tiles[1] + c for r in rows for c in cols]
+            n_tiles = p.tiles[0] * p.tiles[1]
+            ys, xs = tile_bounds(p.height, p.tiles[0]), tile_bounds(
+                p.width, p.tiles[1]
+            )
+            ppf = (ys[rows[-1]][1] - ys[rows[0]][0]) * (
+                xs[cols[-1]][1] - xs[cols[0]][0]
+            )
         if self._passthrough_ok(p, out_codec, out_fps, scale_to, roi):
             # byte copy of already-encoded GOPs — no decode chain at all
             c_t = self.cost_model.passthrough_cost(frames * ppf)
@@ -1030,8 +1084,17 @@ class VSS:
                 g.start_frame, f0
             )
             if ov > 0 and g.joint_ref is None:
+                nbytes, objects = g.nbytes, 1
+                if tile_cover is not None:
+                    if g.tile_sizes and len(g.tile_sizes) == n_tiles:
+                        nbytes = sum(g.tile_sizes[i] for i in tile_cover)
+                    else:
+                        nbytes = int(
+                            g.nbytes * len(tile_cover) / n_tiles
+                        )
+                    objects = len(tile_cover)
                 c_t += (ov / g.num_frames) * self.cost_model.io_cost(
-                    self.backend.kind_for(g.path), g.nbytes
+                    self.backend.kind_for(g.path), nbytes, objects
                 )
         # look-back (§3.1): frames from the containing GOP's start to the
         # entry frame must be decoded if we *enter* the video here.
@@ -1045,6 +1108,17 @@ class VSS:
                 alpha_dec = self.cost_model.alpha(p.codec, "rgb", ppf)
                 lookback = alpha_dec * ppf * (ind + ETA * dep)
         return SegmentChoice(vi, c_t, lookback)
+
+    @staticmethod
+    def _local_box(p: PhysicalMeta, roi: Box) -> Box:
+        """An original-coordinate ROI box in ``p``'s local pixel
+        coordinates (its stored resolution)."""
+        return (
+            int(round((roi[0] - p.roi[0]) * p.scale)),
+            int(round((roi[1] - p.roi[1]) * p.scale)),
+            int(round((roi[2] - p.roi[0]) * p.scale)),
+            int(round((roi[3] - p.roi[1]) * p.scale)),
+        )
 
     @staticmethod
     def _clamp_frames(run: Run, f0: int, f1: int) -> Tuple[int, int]:
@@ -1071,14 +1145,22 @@ class VSS:
         objs: List[GopMeta] = []
         for run_idx, a, b in self._grouped_segments(plan):
             run = plan.runs[run_idx]
+            p = run.physical
+            if p.tiles != (1, 1):
+                # tile objects are fetched per-ROI at extract time; a
+                # whole-GOP prefetch would defeat the layout's point
+                continue
             f0, f1 = self._clamp_frames(
-                run, run.physical.frame_at(a), run.physical.frame_at(b)
+                run, p.frame_at(a), p.frame_at(b)
             )
-            objs.extend(
-                g for g in run.gops
-                if g.start_frame < f1 and g.start_frame + g.num_frames > f0
-                and g.joint_ref is None
-            )
+            for g in run.gops:
+                gs, ge = g.start_frame, g.start_frame + g.num_frames
+                if gs >= f1 or ge <= f0 or g.joint_ref is not None:
+                    continue
+                if self._trim_eligible(g, min(f1, ge) - gs, p):
+                    # served by a ranged prefix fetch, not a full get
+                    continue
+                objs.append(g)
         return objs
 
     @staticmethod
@@ -1158,11 +1240,14 @@ class VSS:
                     data = unwrap_bytes(data)
                 out.append(_codec.deserialize_gop(data))
             else:  # edge GOP: decode, trim, re-encode (the look-back cost)
-                frames = self._load_gop_frames(g, io)
                 lo = max(f0 - gs, 0)
                 hi = min(f1, ge) - gs
+                if self._trim_eligible(g, hi, p):
+                    frames = self._load_gop_prefix(g, hi, io)[lo:]
+                else:
+                    frames = self._load_gop_frames(g, io)[lo:hi]
                 out.append(
-                    _codec.encode_gop(frames[lo:hi], out_codec,
+                    _codec.encode_gop(frames, out_codec,
                                       use_pallas=self.use_pallas)
                 )
         return out, gop_ids
@@ -1177,19 +1262,32 @@ class VSS:
             g for g in run.gops
             if g.start_frame < f1 and g.start_frame + g.num_frames > f0
         ]
-        frames = np.concatenate(self._load_gops_frames(gops, io), axis=0)
+        # spatial crop box (ROI → this video's local pixel coords)
+        lx0, ly0, lx1, ly1 = self._local_box(p, roi)
+        ox = oy = 0  # origin of the loaded pixel region
+        if p.tiles != (1, 1):
+            frames, (ox, oy) = self._load_tiled_frames(
+                p, gops, (lx0, ly0, lx1, ly1), io
+            )
+        else:
+            tail = gops[-1]
+            hi = min(f1, tail.start_frame + tail.num_frames) - tail.start_frame
+            if self._trim_eligible(tail, hi, p):
+                # TVC residuals are closed-loop per-pixel, so a byte
+                # prefix of the GOP decodes frames [0, hi) bit-exactly —
+                # fetch only those bytes instead of the whole object
+                parts = self._load_gops_frames(gops[:-1], io)
+                parts.append(self._load_gop_prefix(tail, hi, io))
+            else:
+                parts = self._load_gops_frames(gops, io)
+            frames = np.concatenate(parts, axis=0)
         base = gops[0].start_frame
         frames = frames[f0 - base : f1 - base]
         # frame-rate division
         step = int(round(p.fps / out_fps))
         if step > 1:
             frames = frames[::step]
-        # spatial crop (ROI → this video's local pixel coords)
-        lx0 = int(round((roi[0] - p.roi[0]) * p.scale))
-        ly0 = int(round((roi[1] - p.roi[1]) * p.scale))
-        lx1 = int(round((roi[2] - p.roi[0]) * p.scale))
-        ly1 = int(round((roi[3] - p.roi[1]) * p.scale))
-        frames = frames[:, ly0:ly1, lx0:lx1]
+        frames = frames[:, ly0 - oy : ly1 - oy, lx0 - ox : lx1 - ox]
         # resample to the requested resolution
         frames = resample(frames, resolution)
         return frames, [g.gop_id for g in gops]
@@ -1244,6 +1342,133 @@ class VSS:
                 out.append(frames)
         return out
 
+    # -- ranged sub-GOP reads ------------------------------------------
+    def _trim_eligible(self, g: GopMeta, hi: int, p: PhysicalMeta) -> bool:
+        """True when frames ``[0, hi)`` of ``g`` can be served by a
+        ranged byte-prefix fetch instead of a full-object get.
+
+        Requires a plainly-stored object (not joint, not deferred-zstd
+        wrapped, not tiled), a genuine trim (``0 < hi < num_frames``)
+        that saves enough of the tail to be worth a second round-trip
+        (``hi`` at most `RANGED_HI_FRACTION` of the GOP), and an object
+        big enough for ranged I/O to beat one small get."""
+        return (
+            g.joint_ref is None
+            and not g.zwrapped
+            and p.tiles == (1, 1)
+            and 0 < hi < g.num_frames
+            and hi <= RANGED_HI_FRACTION * g.num_frames
+            and g.nbytes >= MIN_RANGED_BYTES
+        )
+
+    def _load_gop_prefix(
+        self, g: GopMeta, hi: int, io: Optional[_BatchIO] = None
+    ) -> np.ndarray:
+        """Decode frames ``[0, hi)`` of ``g`` from a byte prefix.
+
+        Probes the first `HEADER_PROBE_BYTES` of the object, reads the
+        v2 header's per-frame offset table, and fetches only the bytes
+        up to frame ``hi``'s chunk boundary.  Falls back to the full
+        object when the header is unparseable (legacy v1 TVC blobs) or
+        lacks offsets.  The prefix decode is bit-exact: TVC residuals
+        are closed-loop per-pixel, so frames [0, hi) depend only on
+        bytes [0, offsets[hi])."""
+        if io is not None:
+            if g.gop_id in io.decoded:  # another spec decoded it fully
+                return io.decoded[g.gop_id][:hi]
+            key = ("pfx", g.gop_id, hi)
+            if key in io.decoded:
+                return io.decoded[key]
+            if g.path in io.blobs:  # another spec full-fetched the blob
+                return self._decode_gop_bytes(io.blobs[g.path])[:hi]
+        src = io if io is not None else self.backend
+        probe = src.get_range(
+            g.path, 0, min(_codec.HEADER_PROBE_BYTES, g.nbytes)
+        )
+        try:
+            codec_name, shape, offsets, pstart = _codec.parse_gop_header(
+                probe
+            )
+        except ValueError:
+            return self._load_gop_frames(g, io)[:hi]  # not a v2 blob
+        t, h, w, c = shape
+        if codec_name == "rgb":
+            end = pstart + hi * h * w * c
+            sub_offsets = None
+        elif offsets is not None and hi < len(offsets):
+            end = pstart + offsets[hi]
+            sub_offsets = tuple(offsets[: hi + 1])
+        else:
+            return self._load_gop_frames(g, io)[:hi]
+        if end > len(probe):
+            probe += src.get_range(g.path, len(probe), end - len(probe))
+        enc = _codec.EncodedGOP(
+            codec_name, (hi, h, w, c), probe[pstart:end], sub_offsets
+        )
+        frames = _codec.decode_gop(enc, use_pallas=self.use_pallas)
+        self._m_ranged_fetches.inc()
+        self._m_ranged_saved.inc(max(0, g.nbytes - len(probe)))
+        if io is not None:
+            io.gops_decoded += 1
+            if not io.stream:
+                io.decoded[("pfx", g.gop_id, hi)] = frames
+        return frames
+
+    # -- tiled reads ---------------------------------------------------
+    def _load_tiled_frames(
+        self,
+        p: PhysicalMeta,
+        gops: Sequence[GopMeta],
+        box: Box,
+        io: Optional[_BatchIO] = None,
+    ) -> Tuple[np.ndarray, Tuple[int, int]]:
+        """Load the tiles of ``gops`` covering local-pixel ``box``,
+        stitch them losslessly, and return the stitched frames plus the
+        pixel origin ``(ox, oy)`` of the stitched region.
+
+        Each tile is an independently-encoded object, so an ROI read
+        fetches and decodes only ``len(rows) * len(cols)`` tiles per
+        GOP instead of the full frame."""
+        rows, cols = tiles_covering(p.tiles, p.width, p.height, box)
+        ys = tile_bounds(p.height, p.tiles[0])
+        xs = tile_bounds(p.width, p.tiles[1])
+        ox, oy = xs[cols[0]][0], ys[rows[0]][0]
+        # one batched fetch of every not-yet-decoded tile
+        need: List[Tuple[int, int, int, str]] = []
+        for g in gops:
+            for r in rows:
+                for c in cols:
+                    if io is not None and (g.gop_id, r, c) in io.decoded:
+                        continue
+                    need.append((g.gop_id, r, c, tile_key(g.path, r, c)))
+        blobs = dict(zip(
+            ((gid, r, c) for gid, r, c, _ in need),
+            (io or self.backend).batch_get([k for _, _, _, k in need]),
+        )) if need else {}
+        if need:
+            self._m_tile_fetches.inc(len(need))
+        if len(rows) * len(cols) < p.tiles[0] * p.tiles[1]:
+            self._m_tile_reads.inc()
+        stitched: List[np.ndarray] = []
+        for g in gops:
+            bands: List[np.ndarray] = []
+            for r in rows:
+                band: List[np.ndarray] = []
+                for c in cols:
+                    tkey = (g.gop_id, r, c)
+                    if io is not None and tkey in io.decoded:
+                        band.append(io.decoded[tkey])
+                        continue
+                    frames = self._decode_gop_bytes(blobs[tkey])
+                    if io is not None:
+                        io.gops_decoded += 1
+                        if not io.stream:
+                            io.decoded[tkey] = frames
+                    band.append(frames)
+                bands.append(np.concatenate(band, axis=2))
+            stitched.append(np.concatenate(bands, axis=1))
+        return np.concatenate(stitched, axis=0), (ox, oy)
+
     # ------------------------------------------------------------------
     # joint compression driver (§5.1) — candidate search + Algorithm 1
     # ------------------------------------------------------------------
@@ -1265,7 +1490,9 @@ class VSS:
         owner: Dict[int, str] = {}
         for name in names:
             for p in self.catalog.physicals_for(name):
-                if not p.is_original:
+                if not p.is_original or p.tiles != (1, 1):
+                    # tiled GOPs have no single whole-frame object to
+                    # rewrite as a joint segment — leave them alone
                     continue
                 for g in self.catalog.gops_for(p.physical_id):
                     if g.joint_ref is not None:
@@ -1585,6 +1812,7 @@ class VSSWriter:
         self.codec = spec.codec
         self.gop_frames = spec.gop_frames
         self.budget_bytes = spec.budget_bytes
+        self.tiles = spec.tiles  # (rows, cols) tile grid, or None
         self.batch_gops = max(1, int(batch_gops))
         if pipelined is None:
             pipelined = store.pipelined_ingest
@@ -1597,8 +1825,12 @@ class VSSWriter:
         self._bytes_written = 0
         self._t_start = spec.t_start
         self._closed = False
-        # encoded GOPs awaiting one batched publish: (key, data, nframes)
-        self._pending: List[Tuple[str, bytes, int]] = []
+        # encoded GOPs awaiting one batched publish:
+        # (key, [(object key, data), ...], nframes, tile_sizes) — one
+        # object for the ordinary layout, rows*cols objects when tiled
+        self._pending: List[
+            Tuple[str, List[Tuple[str, bytes]], int, Optional[List[int]]]
+        ] = []
 
     def _ensure_physical(self, frame_shape) -> None:
         if self._pid is not None:
@@ -1612,6 +1844,7 @@ class VSSWriter:
             self.name, w, h, self.fps, self.codec, roi,
             self._t_start, self._t_start, mse_bound=0.0,
             parent_is_original=True, is_original=True,
+            tiles=self.tiles or (1, 1),
         )
         self.store.catalog.set_original(self.name, self._pid)
         if self.gop_frames is None:
@@ -1649,12 +1882,33 @@ class VSSWriter:
             self._flush_gop(chunk[: self.gop_frames])
 
     def _flush_gop(self, chunk: np.ndarray) -> None:
-        enc = _codec.encode_gop(chunk, self.codec,
-                                use_pallas=self.store.use_pallas)
         key = f"{self.name}/{self._pid}/{self._next_idx}.tvc"
-        self._pending.append(
-            (key, _codec.serialize_gop(enc), chunk.shape[0])
-        )
+        tile_sizes: Optional[List[int]] = None
+        if self.tiles is not None:
+            # tiled layout: encode each spatial tile as its own
+            # independently-decodable object so ROI reads can fetch and
+            # decode only the tiles covering their box.  TVC residuals
+            # are per-pixel, so the split is lossless — stitching the
+            # tiles back reproduces the whole-frame encode bit-exactly.
+            rr, cc = self.tiles
+            items: List[Tuple[str, bytes]] = []
+            tile_sizes = []
+            for r, (y0, y1) in enumerate(tile_bounds(chunk.shape[1], rr)):
+                for c, (x0, x1) in enumerate(
+                    tile_bounds(chunk.shape[2], cc)
+                ):
+                    enc = _codec.encode_gop(
+                        np.ascontiguousarray(chunk[:, y0:y1, x0:x1]),
+                        self.codec, use_pallas=self.store.use_pallas,
+                    )
+                    data = _codec.serialize_gop(enc)
+                    items.append((tile_key(key, r, c), data))
+                    tile_sizes.append(len(data))
+        else:
+            enc = _codec.encode_gop(chunk, self.codec,
+                                    use_pallas=self.store.use_pallas)
+            items = [(key, _codec.serialize_gop(enc))]
+        self._pending.append((key, items, chunk.shape[0], tile_sizes))
         self._next_idx += 1
         if len(self._pending) >= self.batch_gops:
             self._publish_pending()
@@ -1673,14 +1927,19 @@ class VSSWriter:
         pending, self._pending = self._pending, []
         base_idx = self._next_idx - len(pending)
         rows = []
+        items: List[Tuple[str, bytes]] = []
         start = self._next_frame
-        for j, (key, data, nframes) in enumerate(pending):
-            rows.append((self._pid, base_idx + j, start, nframes,
-                         len(data), key))
+        for j, (key, gop_items, nframes, tile_sizes) in enumerate(pending):
+            nbytes = sum(len(d) for _, d in gop_items)
+            row = (self._pid, base_idx + j, start, nframes, nbytes, key)
+            if tile_sizes is not None:
+                row += (json.dumps(tile_sizes),)
+            rows.append(row)
+            items.extend(gop_items)
             start += nframes
         window = _ingest.PublishWindow(
             pid=self._pid,
-            items=[(key, data) for key, data, _n in pending],
+            items=items,
             rows=rows,
             t_end=self._t_start + start / self.fps,
         )

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 Box = Tuple[int, int, int, int]  # x0, y0, x1, y1 (original coords, half-open)
 
@@ -60,6 +60,10 @@ class GopMeta:
     zwrapped: bool = False  # deferred-zstd-wrapped raw GOP (§5.2)
     lru_seq: int = 0
     joint_ref: Optional[int] = None  # joint-compression record id (§5.1)
+    # per-tile object sizes (row-major), for GOPs of a tiled physical
+    # video; None for the ordinary one-object-per-GOP layout.  The
+    # planner prices an ROI read's covering-tile subset from these.
+    tile_sizes: Optional[Tuple[int, ...]] = None
 
     def start_time(self, fps: float, t0: float) -> float:
         return t0 + self.start_frame / fps
@@ -83,6 +87,11 @@ class PhysicalMeta:
     parent_is_original: bool
     is_original: bool
     created: float
+    # physical layout: each GOP is split into tiles_r x tiles_c
+    # independently-encoded tile objects (<path>/t<r>_<c>), so an ROI
+    # read fetches and decodes only the tiles covering its box.
+    # (1, 1) = the ordinary one-object-per-GOP layout.
+    tiles: Tuple[int, int] = (1, 1)
 
     @property
     def scale(self) -> float:
@@ -120,6 +129,44 @@ class Fragment:
 
 def full_roi(width: int, height: int) -> Box:
     return (0, 0, width, height)
+
+
+# -- tiled physical layout ---------------------------------------------------
+def tile_bounds(extent: int, n: int) -> List[Tuple[int, int]]:
+    """Split ``[0, extent)`` into ``n`` near-equal half-open bands —
+    the ONE definition of tile geometry, shared by the writer (split),
+    the read path (stitch) and the planner (pricing), so the three can
+    never disagree about where a tile starts."""
+    return [((extent * i) // n, (extent * (i + 1)) // n) for i in range(n)]
+
+
+def tile_key(path: str, r: int, c: int) -> str:
+    """Object key of one tile of a GOP whose catalog path is ``path``."""
+    return f"{path}/t{r}_{c}"
+
+
+def tile_keys(path: str, tiles: Tuple[int, int]) -> List[str]:
+    """All of a tiled GOP's object keys, row-major."""
+    rr, cc = tiles
+    return [tile_key(path, r, c) for r in range(rr) for c in range(cc)]
+
+
+def tiles_covering(
+    tiles: Tuple[int, int], width: int, height: int, box: Box
+) -> Tuple[List[int], List[int]]:
+    """(row indices, col indices) of the tile grid overlapping the
+    local-pixel box ``(x0, y0, x1, y1)`` of a ``width``x``height``
+    frame."""
+    rr, cc = tiles
+    rows = [
+        r for r, (y0, y1) in enumerate(tile_bounds(height, rr))
+        if y0 < box[3] and y1 > box[1]
+    ]
+    cols = [
+        c for c, (x0, x1) in enumerate(tile_bounds(width, cc))
+        if x0 < box[2] and x1 > box[0]
+    ]
+    return rows, cols
 
 
 def mse_to_psnr(mse: float, peak: float = 255.0) -> float:

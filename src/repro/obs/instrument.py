@@ -25,8 +25,8 @@ from repro.obs.registry import (
 from repro.storage.base import ObjectNotFound, ObjectStat, StorageBackend
 
 _OPS = (
-    "put", "get", "delete", "stat", "list", "batch_get", "batch_put",
-    "exists", "ensure_durable",
+    "put", "get", "get_range", "delete", "stat", "list", "batch_get",
+    "batch_get_ranges", "batch_put", "exists", "ensure_durable",
 )
 
 M_OPS = "vss_backend_ops_total"
@@ -94,6 +94,22 @@ class InstrumentedBackend(StorageBackend):
         data = self._run("get", self.inner.get, key)
         self._bytes["get"].observe(len(data))
         return data
+
+    def get_range(self, key: str, start: int, length: int) -> bytes:
+        data = self._run("get_range", self.inner.get_range,
+                         key, start, length)
+        self._bytes["get_range"].observe(len(data))
+        return data
+
+    def batch_get_ranges(
+        self, reqs: Sequence[Tuple[str, int, int]]
+    ) -> List[bytes]:
+        blobs = self._run(
+            "batch_get_ranges", self.inner.batch_get_ranges, reqs)
+        h = self._bytes["batch_get_ranges"]
+        for b in blobs:
+            h.observe(len(b))
+        return blobs
 
     def delete(self, key: str) -> None:
         self._run("delete", self.inner.delete, key)

@@ -46,6 +46,7 @@ Standalone::
 from __future__ import annotations
 
 import json
+import re
 import secrets
 import threading
 import time
@@ -70,6 +71,10 @@ from repro.serving.qos import (
 from repro.serving.signing import DEFAULT_TTL_S, UrlSigner
 
 MAX_READ_BODY = 1 << 20  # a ReadSpec is small; anything bigger is abuse
+
+# HTTP Range header accepted on signed /v1/gop and /v1/segment fetches
+# (single ascending byte range; same grammar as the object server)
+_RANGE_RE = re.compile(r"bytes=(\d+)-(\d*)$")
 
 _SPEC_FIELDS = (
     "name", "t", "resolution", "roi", "fps", "codec", "quality_eps_db",
@@ -525,8 +530,7 @@ class _ServiceHandler(BaseHTTPRequestHandler):
         if data is None:
             self._respond(404, b"unknown or expired request id")
             return
-        self._respond(200, data, extra={
-            "Content-Type": "application/octet-stream"})
+        self._serve_bytes(data)
 
     def _do_gop(self, path: str):
         self.service.count_request("gop")
@@ -541,8 +545,32 @@ class _ServiceHandler(BaseHTTPRequestHandler):
         except Exception as exc:  # noqa: BLE001 - wire boundary
             self._respond(500, f"{type(exc).__name__}: {exc}".encode())
             return
-        self._respond(200, data, extra={
-            "Content-Type": "application/octet-stream"})
+        self._serve_bytes(data)
+
+    def _serve_bytes(self, data: bytes) -> None:
+        """Answer an octet-stream response, honouring ``Range:
+        bytes=a-b`` with 206/Content-Range (416 for unsatisfiable
+        ranges) — so a sub-GOP client can pull just the byte prefix its
+        frame trim decodes, through the same signed URL it was handed
+        (the signature covers the path; the range picks bytes within
+        it)."""
+        extra = {"Content-Type": "application/octet-stream",
+                 "Accept-Ranges": "bytes"}
+        rng = self.headers.get("Range")
+        if rng:
+            m = _RANGE_RE.match(rng.strip())
+            if not m or int(m.group(1)) >= len(data):
+                self._respond(416, b"", extra={
+                    **extra, "Content-Range": f"bytes */{len(data)}"})
+                return
+            a = int(m.group(1))
+            b = int(m.group(2)) + 1 if m.group(2) else len(data)
+            b = min(b, len(data))
+            self._respond(206, data[a:b], extra={
+                **extra,
+                "Content-Range": f"bytes {a}-{b - 1}/{len(data)}"})
+            return
+        self._respond(200, data, extra=extra)
 
 
 def main(argv=None) -> None:  # pragma: no cover - operational entry point

@@ -95,6 +95,39 @@ class StorageBackend(abc.ABC):
         for key, data in items:
             self.put(key, data)
 
+    def get_range(self, key: str, start: int, length: int) -> bytes:
+        """Bytes ``[start, start+length)`` of the object — the ranged
+        read behind sub-GOP fetches.  Contract (every backend must
+        agree, whatever its transport):
+
+          * ``start < 0`` or ``length < 1`` raises ValueError;
+          * ``start`` at or past the object's end raises ValueError
+            (the caller's byte index is wrong — never silently empty);
+          * a range running past the end returns the tail (fewer than
+            ``length`` bytes), mirroring HTTP 206 semantics;
+          * unknown keys raise ObjectNotFound.
+
+        Default: full get + slice — correct everywhere, and already a
+        win for backends whose ``get`` is memory-speed.  Backends with
+        a cheaper partial read (seek on a file, ``Range:`` over HTTP,
+        hot-tier slices) override it."""
+        if start < 0 or length < 1:
+            raise ValueError(f"bad range start={start} length={length}")
+        data = self.get(key)
+        if start >= len(data):
+            raise ValueError(
+                f"range start {start} outside {key!r} ({len(data)} bytes)"
+            )
+        return data[start : start + length]
+
+    def batch_get_ranges(
+        self, reqs: Sequence[Tuple[str, int, int]]
+    ) -> List[bytes]:
+        """Fetch many ``(key, start, length)`` ranges, preserving
+        order.  Backends that can overlap I/O override this the way
+        they override ``batch_get``."""
+        return [self.get_range(k, s, n) for k, s, n in reqs]
+
     def kind_for(self, key: str) -> str:
         """The I/O performance class that would serve ``key`` right now
         ("memory", "localfs", ...).  Tiered backends answer per key —

@@ -175,6 +175,10 @@ class FaultInjectingBackend(StorageBackend):
         self._pre("get", key)
         return self.inner.get(key)
 
+    def get_range(self, key: str, start: int, length: int) -> bytes:
+        self._pre("get_range", key)
+        return self.inner.get_range(key, start, length)
+
     def delete(self, key: str) -> None:
         self._pre("delete", key)
         self.inner.delete(key)

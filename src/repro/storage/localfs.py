@@ -67,6 +67,20 @@ class LocalFSBackend(StorageBackend):
         except FileNotFoundError:
             raise ObjectNotFound(key) from None
 
+    def get_range(self, key: str, start: int, length: int) -> bytes:
+        if start < 0 or length < 1:
+            raise ValueError(f"bad range start={start} length={length}")
+        try:
+            with open(self._path(key), "rb") as f:
+                if start >= os.fstat(f.fileno()).st_size:
+                    raise ValueError(
+                        f"range start {start} outside {key!r}"
+                    )
+                f.seek(start)
+                return f.read(length)
+        except FileNotFoundError:
+            raise ObjectNotFound(key) from None
+
     def delete(self, key: str) -> None:
         try:
             os.unlink(self._path(key))

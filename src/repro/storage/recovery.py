@@ -43,6 +43,14 @@ from repro.storage.base import (
 )
 
 
+def tile_keys(path, tiles):
+    # lazy import: storage must stay importable without repro.core, but
+    # tile-key layout has exactly one definition (repro.core.types)
+    from repro.core.types import tile_keys as _tk
+
+    return _tk(path, tiles)
+
+
 def validate_gop_bytes(data: bytes) -> bool:
     """True iff ``data`` parses as one complete GOP object (optionally
     deferred-wrapped).  Truncated compressed payloads fail to inflate,
@@ -59,7 +67,7 @@ def validate_gop_bytes(data: bytes) -> bool:
         if enc.codec == _tvc.RGB:
             return len(enc.payload) == t * h * w * c
         tier = _tvc.TIERS[enc.codec]
-        raw = _tvc._unzstd(enc.payload)
+        raw = _tvc._raw_payload(enc)  # v1 single-stream or v2 chunked
         isz = h * w * c
         expected = isz + (t - 1) * isz * (tier.resid_bits // 8)
         return len(raw) == expected
@@ -78,10 +86,17 @@ def scavenge(backend: StorageBackend, catalog, *,
     report = RecoveryReport()
     report.temps_removed = backend.sweep_temps()
 
+    tiles_of = _tiled_physicals(catalog)
     referenced = set(catalog.all_joint_segment_paths())
     for g in catalog.all_gops():
         if g.joint_ref is not None:
             continue  # payload lives in the joint record's segment objects
+        tiles = tiles_of.get(g.physical_id)
+        if tiles is not None:
+            keys = tile_keys(g.path, tiles)
+            referenced.update(keys)
+            _scavenge_tiled(backend, catalog, g, keys, report)
+            continue
         referenced.add(g.path)
         try:
             st = backend.stat(g.path)
@@ -109,6 +124,49 @@ def scavenge(backend: StorageBackend, catalog, *,
     return report
 
 
+def _tiled_physicals(catalog):
+    """{physical_id: (rows, cols)} for every tiled physical video —
+    their GOP rows map to rows*cols tile objects, not one object."""
+    return {
+        p.physical_id: p.tiles
+        for p in catalog.all_physicals()
+        if p.tiles != (1, 1)
+    }
+
+
+def _scavenge_tiled(backend, catalog, g, keys, report) -> None:
+    """Scavenge one tiled GOP: the row is whole iff EVERY tile object
+    exists and validates; a valid set with stale sizes is repaired in
+    place (nbytes + tile_sizes), anything else drops the row and its
+    surviving tiles (a GOP missing one tile cannot be stitched)."""
+    import json as _json
+
+    sizes = []
+    for key in keys:
+        try:
+            sizes.append(backend.stat(key).nbytes)
+        except ObjectNotFound:
+            sizes = None
+            break
+    if sizes is not None and tuple(sizes) == (g.tile_sizes or ()) \
+            and sum(sizes) == g.nbytes:
+        return
+    if sizes is not None:
+        datas = [backend.get(key) for key in keys]
+        if all(validate_gop_bytes(d) for d in datas):
+            catalog.update_gop(
+                g.gop_id,
+                nbytes=sum(len(d) for d in datas),
+                tile_sizes=_json.dumps([len(d) for d in datas]),
+            )
+            report.gops_repaired += 1
+            return
+    for key in keys:
+        backend.delete(key)  # idempotent on missing keys
+    _drop_gop(catalog, g)
+    report.gops_dropped += 1
+
+
 # ---------------------------------------------------------------------------
 # replica scrubber (ReplicatedBackend.recover / VSS.scrub)
 # ---------------------------------------------------------------------------
@@ -133,10 +191,17 @@ def scrub(backend, catalog, *, collect_orphans: bool = False) -> ScrubReport:
     report = ScrubReport()
     report.temps_removed = backend.sweep_temps()
 
+    tiles_of = _tiled_physicals(catalog)
     referenced = set(catalog.all_joint_segment_paths())
     for g in catalog.all_gops():
         if g.joint_ref is not None:
             continue  # payload lives in the joint record's segment objects
+        tiles = tiles_of.get(g.physical_id)
+        if tiles is not None:
+            keys = tile_keys(g.path, tiles)
+            referenced.update(keys)
+            _scrub_tiled(backend, catalog, g, keys, report)
+            continue
         referenced.add(g.path)
         healthy, torn, missing, down = _probe(backend, g.path,
                                               validate=validate_gop_bytes)
@@ -190,6 +255,57 @@ def scrub(backend, catalog, *, collect_orphans: bool = False) -> ScrubReport:
                 report.replicas_pruned += 1
     report.orphans_removed = len(orphan_keys)
     return report
+
+
+def _scrub_tiled(backend, catalog, g, keys, report) -> None:
+    """Scrub one tiled GOP's tile objects across replicas.
+
+    Per tile: repair missing/torn/divergent replicas from a healthy
+    copy (same invariants as the whole-object path).  The row is
+    dropped only when some tile has NO healthy copy anywhere and no
+    down child could still hold one — then every surviving tile of the
+    GOP is pruned too (an incomplete tile set cannot be stitched)."""
+    import json as _json
+
+    canon_sizes, lost = [], False
+    for i, key in enumerate(keys):
+        healthy, torn, missing, down = _probe(backend, key,
+                                              validate=validate_gop_bytes)
+        report.replicas_skipped += len(down)
+        if not healthy:
+            if down:
+                return  # a down child may hold the last good copy
+            lost = True
+            break
+        want = g.tile_sizes[i] if (
+            g.tile_sizes and i < len(g.tile_sizes)
+        ) else None
+        canonical = next(
+            (d for _ci, d in healthy if len(d) == want), healthy[0][1]
+        )
+        canon_sizes.append(len(canonical))
+        divergent = [ci for ci, d in healthy if d != canonical]
+        for ci in (*missing, *torn, *divergent):
+            backend.replica_put(ci, key, canonical)
+            report.replicas_repaired += 1
+    if lost:
+        for key in keys:
+            for ci in backend.replicas_for(key):
+                try:
+                    backend.replica_delete(ci, key)
+                except Exception:
+                    pass  # a down child's copy is swept by a later scrub
+        _drop_gop(catalog, g)
+        report.gops_dropped += 1
+        return
+    if tuple(canon_sizes) != (g.tile_sizes or ()) \
+            or sum(canon_sizes) != g.nbytes:
+        catalog.update_gop(
+            g.gop_id,
+            nbytes=sum(canon_sizes),
+            tile_sizes=_json.dumps(canon_sizes),
+        )
+        report.gops_repaired += 1
 
 
 def _probe(backend, key, validate=None):

@@ -95,6 +95,28 @@ _RETRYABLE_EXCS = (http.client.HTTPException, ConnectionError,
                    socket.timeout, socket.error, OSError)
 
 
+def _expected_partial_len(content_range: Optional[str], start: int,
+                          length: int) -> Optional[int]:
+    """How many bytes a well-formed 206 for ``[start, start+length)``
+    must carry, from its ``Content-Range: bytes a-b/total``.  None when
+    the header is missing/malformed or names a different window — the
+    caller treats that as unverifiable and retries."""
+    if not content_range or not content_range.startswith("bytes "):
+        return None
+    try:
+        span, _, total_s = content_range[len("bytes "):].partition("/")
+        a_s, _, b_s = span.partition("-")
+        a, b, total = int(a_s), int(b_s), int(total_s)
+    except ValueError:
+        return None
+    if a != start or b < a or b >= total:
+        return None
+    expect = b - a + 1
+    if expect > length or expect < min(length, total - start):
+        return None  # server answered a window we did not ask for
+    return expect
+
+
 class RemoteError(IOError):
     """A request exhausted its retries (last cause attached)."""
 
@@ -104,12 +126,14 @@ class RemoteError(IOError):
 
 
 class _Response:
-    __slots__ = ("status", "data", "length")
+    __slots__ = ("status", "data", "length", "content_range")
 
-    def __init__(self, status: int, data: bytes, length: Optional[int]):
+    def __init__(self, status: int, data: bytes, length: Optional[int],
+                 content_range: Optional[str] = None):
         self.status = status
         self.data = data
         self.length = length  # Content-Length header (HEAD has no body)
+        self.content_range = content_range  # 206 partial responses
 
 
 class RemoteBackend(StorageBackend):
@@ -293,7 +317,8 @@ class RemoteBackend(StorageBackend):
             self._give_back(conn)
             clen = resp.getheader("Content-Length")
             return _Response(resp.status, data,
-                             None if clen is None else int(clen))
+                             None if clen is None else int(clen),
+                             resp.getheader("Content-Range"))
         raise RemoteError(
             f"{method} {path} failed after {self.max_retries + 1}"
             f" attempts: {last}", last,
@@ -302,6 +327,18 @@ class RemoteBackend(StorageBackend):
     @staticmethod
     def _opath(key: str) -> str:
         return "/o/" + urllib.parse.quote(validate_key(key), safe="/")
+
+    def batch_get_ranges(
+        self, reqs: Sequence[Tuple[str, int, int]]
+    ) -> List[bytes]:
+        """Overlap ranged round-trips across the connection pool, the
+        way ``batch_get`` overlaps full fetches."""
+        reqs = list(reqs)
+        if len(reqs) <= 1:
+            return [self.get_range(*r) for r in reqs]
+        return list(self._executor().map(
+            lambda r: self.get_range(*r), reqs
+        ))
 
     # -- contract ----------------------------------------------------------
     def put(self, key: str, data: bytes) -> None:
@@ -374,27 +411,51 @@ class RemoteBackend(StorageBackend):
         raise primary.exception()  # both exhausted their retries
 
     def get_range(self, key: str, start: int, length: int) -> bytes:
-        """Ranged GET (``Range: bytes=start-``): fetch ``length`` bytes
-        at ``start`` without pulling the whole object — partial GOP
-        reads over a slow link."""
+        """Ranged GET (``Range: bytes=start-end``): fetch ``length``
+        bytes at ``start`` without pulling the whole object — the
+        transport behind sub-GOP reads over a slow link.
+
+        A 206 body is verified against its ``Content-Range`` before
+        being returned: a truncated partial body (proxy bug, server
+        mid-restart) is indistinguishable from a legitimate short tail
+        by length alone, so a mismatch retries with the same
+        backoff/budget as any other transient failure instead of
+        handing corrupt bytes to the decoder."""
         if start < 0 or length < 1:
             raise ValueError(f"bad range start={start} length={length}")
         end = start + length - 1
-        r = self._request("GET", self._opath(key),
-                          headers={"Range": f"bytes={start}-{end}"})
-        if r.status == 404:
-            raise ObjectNotFound(key)
-        if r.status == 416:
-            raise ValueError(f"range {start}-{end} outside {key!r}")
-        if r.status == 200:
-            # a server that ignores Range answers 200 + full body;
-            # slice client-side rather than hand back the whole object
-            if start >= len(r.data):
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                self._c_retries.inc()
+                time.sleep(min(self.backoff_max,
+                               self.backoff_base * (2 ** (attempt - 1))))
+            r = self._request("GET", self._opath(key),
+                              headers={"Range": f"bytes={start}-{end}"})
+            if r.status == 404:
+                raise ObjectNotFound(key)
+            if r.status == 416:
                 raise ValueError(f"range {start}-{end} outside {key!r}")
-            return r.data[start:start + length]
-        if r.status != 206:
-            raise RemoteError(f"ranged GET {key!r} -> {r.status}")
-        return r.data
+            if r.status == 200:
+                # a server that ignores Range answers 200 + full body;
+                # slice client-side rather than hand back the whole
+                # object as if it were the requested window
+                if start >= len(r.data):
+                    raise ValueError(f"range {start}-{end} outside {key!r}")
+                return r.data[start:start + length]
+            if r.status != 206:
+                raise RemoteError(f"ranged GET {key!r} -> {r.status}")
+            expect = _expected_partial_len(r.content_range, start, length)
+            if expect is not None and len(r.data) == expect:
+                return r.data
+            last = RemoteError(
+                f"short/unverifiable 206 body for {key!r}: got"
+                f" {len(r.data)} bytes, Content-Range {r.content_range!r}"
+            )
+        raise RemoteError(
+            f"ranged GET {key!r} failed after {self.max_retries + 1}"
+            f" attempts: {last}", last,
+        )
 
     def stat(self, key: str) -> ObjectStat:
         # the size travels in the HEAD response's Content-Length (HEAD

@@ -452,6 +452,34 @@ class ReplicatedBackend(StorageBackend):
             f"no replica could serve {key!r}", errors
         )
 
+    def get_range(self, key: str, start: int, length: int) -> bytes:
+        """Ranged read with the same replica fallback as ``get``.  The
+        ``validate`` hook is skipped — it checks whole objects, and a
+        partial body can never satisfy it — so a torn replica is caught
+        by the caller's header/offset parse instead."""
+        if start < 0 or length < 1:
+            raise ValueError(f"bad range start={start} length={length}")
+        self._wait_key(key)  # read-your-writes, as in get()
+        errors: List[BaseException] = []
+        order = self._read_order(key)
+        for i, ci in enumerate(order):
+            try:
+                data = self._child(ci).get_range(key, start, length)
+            except ValueError:
+                raise  # the range is wrong, not the replica
+            except Exception as exc:
+                errors.append(exc)
+                continue
+            if i > 0:
+                with self._lock:
+                    self.stats.fallback_reads += 1
+            return data
+        if self._confidently_missing(errors, len(order)):
+            raise ObjectNotFound(key)
+        raise ReplicationError(
+            f"no replica could serve range of {key!r}", errors
+        )
+
     def batch_get(self, keys: Sequence[str]) -> List[bytes]:
         """Round-based fan-out: round r fetches every still-missing key
         from its r-th preferred replica, one task per child so I/O

@@ -112,6 +112,9 @@ class ShardedBackend(StorageBackend):
     def get(self, key: str) -> bytes:
         return self._vol(key).get(key)
 
+    def get_range(self, key: str, start: int, length: int) -> bytes:
+        return self._vol(key).get_range(key, start, length)
+
     def delete(self, key: str) -> None:
         self._vol(key).delete(key)
 
@@ -134,6 +137,30 @@ class ShardedBackend(StorageBackend):
             vol = self.volumes[vol_idx]
             for i in idxs:
                 results[i] = vol.get(keys[i])
+
+        futures = [
+            self._pool.submit(fetch, vol_idx, idxs)
+            for vol_idx, idxs in by_vol.items()
+        ]
+        for f in futures:
+            f.result()  # propagate ObjectNotFound etc.
+        return results
+
+    def batch_get_ranges(
+        self, reqs: Sequence[Tuple[str, int, int]]
+    ) -> List[bytes]:
+        """Fan ranged reads out per owning volume, mirroring
+        ``batch_get``."""
+        by_vol: Dict[int, List[int]] = {}
+        for i, (k, _s, _n) in enumerate(reqs):
+            by_vol.setdefault(self.volume_for(k), []).append(i)
+        results: List[bytes] = [b""] * len(reqs)
+
+        def fetch(vol_idx: int, idxs: List[int]):
+            vol = self.volumes[vol_idx]
+            for i in idxs:
+                k, s, n = reqs[i]
+                results[i] = vol.get_range(k, s, n)
 
         futures = [
             self._pool.submit(fetch, vol_idx, idxs)

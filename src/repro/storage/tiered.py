@@ -514,6 +514,50 @@ class TieredBackend(StorageBackend):
             self._admit(key, data)
         return data
 
+    def get_range(self, key: str, start: int, length: int) -> bytes:
+        """A hot hit slices in memory; a miss delegates the ranged read
+        to the cold tier WITHOUT admitting — partial bytes must never
+        land in the hot tier under the full object's key (a later get
+        would serve the fragment as the whole object)."""
+        if start < 0 or length < 1:
+            raise ValueError(f"bad range start={start} length={length}")
+        with self._lock:
+            data = self._hot.get(key)
+        if data is not None:
+            self._c_hits.inc()
+            if start >= len(data):
+                raise ValueError(f"range start {start} outside {key!r}")
+            return data[start : start + length]
+        self._c_misses.inc()
+        return self.cold.get_range(key, start, length)
+
+    def batch_get_ranges(
+        self, reqs: Sequence[Tuple[str, int, int]]
+    ) -> List[bytes]:
+        with self._lock:
+            hot = {k: self._hot[k] for k, _s, _n in reqs if k in self._hot}
+        results: List[Optional[bytes]] = [None] * len(reqs)
+        missing: List[int] = []
+        for i, (k, s, n) in enumerate(reqs):
+            data = hot.get(k)
+            if data is None:
+                missing.append(i)
+                continue
+            if s < 0 or n < 1:
+                raise ValueError(f"bad range start={s} length={n}")
+            if s >= len(data):
+                raise ValueError(f"range start {s} outside {k!r}")
+            results[i] = data[s : s + n]
+        self._c_hits.inc(len(reqs) - len(missing))
+        self._c_misses.inc(len(missing))
+        if missing:
+            fetched = self.cold.batch_get_ranges(
+                [reqs[i] for i in missing]
+            )
+            for i, data in zip(missing, fetched):
+                results[i] = data
+        return results  # type: ignore[return-value]
+
     def batch_get(self, keys: Sequence[str]) -> List[bytes]:
         with self._lock:
             hot = {k: self._hot[k] for k in keys if k in self._hot}

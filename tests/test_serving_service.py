@@ -401,3 +401,54 @@ def test_spec_from_json():
         spec_from_json({})
     with pytest.raises(ValueError):
         spec_from_json("just a string")
+
+
+def _get_range(base, path, rng):
+    req = urllib.request.Request(base + path, headers={"Range": rng})
+    try:
+        with urllib.request.urlopen(req) as r:
+            return r.status, r.read(), dict(r.headers)
+    except urllib.error.HTTPError as e:
+        return e.code, e.read(), dict(e.headers)
+
+
+def test_signed_gop_fetch_honours_range(served):
+    """A signed /v1/gop URL answers HTTP Range requests with 206 +
+    Content-Range (416 when unsatisfiable) so sub-GOP clients can pull
+    just the byte prefix their frame trim decodes."""
+    service, vss = served
+    status, body, _ = _get(service.url, "/v1/manifest/road")
+    gops = [g for p in json.loads(body)["physicals"] for g in p["gops"]]
+    url = gops[0]["url"]
+    status, full, headers = _get(service.url, url)
+    assert status == 200
+    assert headers.get("Accept-Ranges") == "bytes"
+
+    status, part, headers = _get_range(service.url, url, "bytes=0-99")
+    assert status == 206
+    assert part == full[:100]
+    assert headers["Content-Range"] == f"bytes 0-99/{len(full)}"
+
+    status, tail, headers = _get_range(service.url, url, "bytes=100-")
+    assert status == 206
+    assert tail == full[100:]
+
+    status, _body, headers = _get_range(
+        service.url, url, f"bytes={len(full)}-"
+    )
+    assert status == 416
+    assert headers["Content-Range"] == f"bytes */{len(full)}"
+
+
+def test_segment_fetch_honours_range(served):
+    service, vss = served
+    status, manifest, _ = _post(
+        service.url, {"name": "road", "t": [0.0, 0.5], "codec": "tvc-med"}
+    )
+    assert status == 200
+    seg = manifest["segments"][0]
+    _status, full, _ = _get(service.url, seg["url"])
+    status, part, headers = _get_range(service.url, seg["url"], "bytes=8-23")
+    assert status == 206
+    assert part == full[8:24]
+    assert headers["Content-Range"] == f"bytes 8-23/{len(full)}"

@@ -108,3 +108,153 @@ def test_budget_eviction_keeps_lossless_cover(vss, clip):
     out = vss.read("v", codec="rgb", cache=False).frames
     assert out.shape == clip.shape
     assert exact_psnr(out, clip) >= 40.0
+
+
+# ---------------------------------------------------------------------------
+# sub-GOP ranged reads + tiled physical layout
+# ---------------------------------------------------------------------------
+
+class _CountingBackend:
+    """Wraps a backend and counts every payload byte it serves."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.bytes_served = 0
+
+    def get(self, key):
+        data = self._inner.get(key)
+        self.bytes_served += len(data)
+        return data
+
+    def get_range(self, key, start, length):
+        data = self._inner.get_range(key, start, length)
+        self.bytes_served += len(data)
+        return data
+
+    def batch_get(self, keys):
+        out = self._inner.batch_get(keys)
+        self.bytes_served += sum(len(d) for d in out)
+        return out
+
+    def batch_get_ranges(self, reqs):
+        out = self._inner.batch_get_ranges(reqs)
+        self.bytes_served += sum(len(d) for d in out)
+        return out
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def test_edge_trim_moves_strictly_fewer_bytes(tmp_path, clip):
+    """A 3-frame read of a 30-frame GOP must fetch a strict byte subset
+    of the GOP object — the ranged-I/O tentpole's core guarantee — and
+    still decode bit-exactly."""
+    from repro.core.store import VSS
+    from repro.storage import MemoryBackend
+
+    backend = _CountingBackend(MemoryBackend())
+    vss = VSS(str(tmp_path / "vss"), backend=backend)
+    vss.write("v", clip, fps=30.0, codec="tvc-ll", gop_frames=30)
+
+    backend.bytes_served = 0
+    trimmed = vss.read("v", t=(0.0, 3 / 30), codec="rgb", cache=False).frames
+    trim_bytes = backend.bytes_served
+
+    backend.bytes_served = 0
+    full = vss.read("v", t=(0.0, 1.0), codec="rgb", cache=False).frames
+    full_bytes = backend.bytes_served
+
+    assert np.array_equal(trimmed, full[:3])  # bit-exact prefix decode
+    assert trim_bytes < full_bytes  # strictly fewer bytes moved
+    # the acceptance gate: a 3/30 trim keeps well under 60% of the bytes
+    assert trim_bytes <= 0.6 * full_bytes
+    assert vss.registry.value("vss_read_ranged_bytes_saved_total") > 0
+    vss.close()
+
+
+def test_tiled_roi_fetches_only_covering_tiles(tmp_path, clip):
+    """An ROI read of a tiled video fetches a strict subset of the tile
+    objects and stitches them bit-exactly."""
+    from repro.core.spec import WriteSpec
+    from repro.core.store import VSS
+    from repro.storage import MemoryBackend
+
+    backend = _CountingBackend(MemoryBackend())
+    vss = VSS(str(tmp_path / "vss"), backend=backend)
+    w = vss.writer_spec(WriteSpec(name="v", fps=30.0, codec="tvc-ll",
+                                  gop_frames=15, tiles=(2, 2)))
+    w.append(clip)
+    w.close()
+
+    backend.bytes_served = 0
+    full = vss.read("v", codec="rgb", cache=False).frames
+    full_bytes = backend.bytes_served
+    assert np.array_equal(full, clip)  # lossless stitch of all tiles
+
+    # a quadrant ROI needs 1 of 4 tiles per GOP
+    h, w_, roi = clip.shape[1], clip.shape[2], (0, 0, 40, 30)
+    backend.bytes_served = 0
+    part = vss.read("v", roi=roi, codec="rgb", cache=False).frames
+    assert np.array_equal(part, clip[:, :30, :40])
+    assert backend.bytes_served < 0.5 * full_bytes
+    assert vss.registry.value("vss_tile_fetches_total") > 0
+    vss.close()
+
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    def _subgop_cases(fn):
+        return settings(max_examples=12, deadline=None)(given(
+            seed=st.integers(0, 2**31 - 1),
+            codec=st.sampled_from(["tvc-ll", "tvc-hi", "tvc-med"]),
+            hi=st.integers(1, 9),
+            tiles=st.sampled_from([None, (2, 2), (1, 3), (3, 2)]),
+        )(fn))
+
+except ImportError:
+    def _subgop_cases(fn):
+        return pytest.mark.parametrize("seed,codec,hi,tiles", [
+            (0, "tvc-ll", 3, None),
+            (1, "tvc-hi", 1, (2, 2)),
+            (2, "tvc-med", 7, (1, 3)),
+            (3, "tvc-ll", 9, (3, 2)),
+            (4, "tvc-hi", 4, None),
+        ])(fn)
+
+
+@_subgop_cases
+def test_subgop_and_tile_bitexact_property(tmp_path_factory, seed, codec,
+                                           hi, tiles):
+    """Property: for any codec tier, trim point and tile grid, a ranged
+    sub-GOP read and a tiled ROI read reproduce exactly the frames the
+    whole-object path produces."""
+    from repro.core.spec import WriteSpec
+    from repro.core.store import VSS
+
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, 256, (1, 48, 64, 3), np.int16)
+    drift = rng.integers(-2, 3, (24, 48, 64, 3), np.int16).cumsum(0)
+    frames = np.clip(base + drift, 0, 255).astype(np.uint8)
+
+    root = tmp_path_factory.mktemp("subgop")
+    vss = VSS(str(root / "vss"))
+    w = vss.writer_spec(WriteSpec(name="v", fps=12.0, codec=codec,
+                                  gop_frames=12, tiles=tiles))
+    w.append(frames)
+    w.close()
+
+    whole = vss.read("v", codec="rgb", cache=False).frames
+    part = vss.read("v", t=(0.0, hi / 12.0), codec="rgb",
+                    cache=False).frames
+    assert np.array_equal(part, whole[:hi])
+
+    roi = (tuple(rng.integers(0, 16, 2)) +
+           tuple(rng.integers(33, 48, 1)) + tuple(rng.integers(33, 48, 1)))
+    roi = (int(roi[0]), int(roi[1]), int(roi[2]), int(roi[3]))
+    r = vss.read("v", roi=roi, codec="rgb", cache=False).frames
+    assert np.array_equal(
+        r, whole[:, roi[1]:roi[3], roi[0]:roi[2]]
+    )
+    vss.close()
