@@ -16,6 +16,7 @@ from typing import Iterator
 
 import numpy as np
 
+from repro.core.config import config_from_legacy
 from repro.core.store import VSS
 from repro.data.video import synthesize_overlapping_pair, synthesize_road
 
@@ -41,7 +42,12 @@ def timer() -> Iterator[list]:
 
 
 def fresh_store(**kw) -> VSS:
-    return VSS(tempfile.mkdtemp(prefix="vssbench_"), **kw)
+    """Store in a throwaway root.  Accepts either ``config=VSSConfig``
+    or the old flat keyword names (translated, no deprecation spam)."""
+    config = kw.pop("config", None)
+    if kw:
+        config = config_from_legacy(config, kw)
+    return VSS(tempfile.mkdtemp(prefix="vssbench_"), config=config)
 
 
 # dataset cache (one synthesis per process)

@@ -20,6 +20,7 @@ import time
 import numpy as np
 
 from benchmarks.common import Row, road, timer
+from repro.core.config import VSSConfig
 from repro.core.store import VSS
 from repro.storage import (
     LocalFSBackend,
@@ -59,7 +60,7 @@ def _run(frames, dur, rows, stores, roots, scale: float) -> list:
     for name, make in BACKENDS:
         root = tempfile.mkdtemp(prefix=f"vssbench22_{name}_")
         roots.append(root)
-        vss = VSS(root, backend=make(root + "/objects"))
+        vss = VSS(root, config=VSSConfig(backend=make(root + "/objects")))
         vss.write("v", frames, fps=30.0, codec="h264", gop_frames=15,
                   budget_bytes=10**10)
         # dense lossless fragment set for the batch sweep: many ~raw-size

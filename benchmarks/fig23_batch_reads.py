@@ -23,6 +23,7 @@ import tempfile
 
 from benchmarks.common import Row, road, timer
 from repro.core.spec import ReadSpec
+from repro.core.config import VSSConfig
 from repro.core.store import VSS
 from repro.storage import LocalFSBackend, MemoryBackend, ShardedBackend
 
@@ -58,7 +59,7 @@ def run(scale: float = 1.0) -> list:
         for name, make in BACKENDS:
             root = tempfile.mkdtemp(prefix=f"vssbench23_{name}_")
             roots.append(root)
-            vss = VSS(root, backend=make(root + "/objects"))
+            vss = VSS(root, config=VSSConfig(backend=make(root + "/objects")))
             # dense lossless GOPs: the decode-heavy §3 access pattern
             vss.write("v", frames, fps=30.0, codec="tvc-ll", gop_frames=5,
                       budget_bytes=10**10)

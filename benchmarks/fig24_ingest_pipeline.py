@@ -33,6 +33,7 @@ import tempfile
 import time
 
 from benchmarks.common import Row, road, timer
+from repro.core.config import DeferredConfig, IngestConfig, VSSConfig
 from repro.core.spec import WriteSpec
 from repro.core.store import VSS
 from repro.storage import LocalFSBackend, ShardedBackend, StorageBackend
@@ -135,11 +136,12 @@ def run(scale: float = 1.0) -> list:
             for _trial in range(TRIALS):  # interleave modes across trials
                 for mode in ("blocking", "pipelined"):
                     root = tempfile.mkdtemp(prefix=f"vssbench24_{name}_")
-                    vss = VSS(
-                        root, backend=make(root + "/objects"),
-                        enable_deferred=False, enable_compaction=False,
-                        ingest_workers=WORKERS,
-                    )
+                    vss = VSS(root, config=VSSConfig(
+                        backend=make(root + "/objects"),
+                        deferred=DeferredConfig(enabled=False),
+                        compaction=False,
+                        ingest=IngestConfig(workers=WORKERS),
+                    ))
                     try:
                         secs = _ingest(vss, frames, streams,
                                        pipelined=mode == "pipelined")

@@ -23,6 +23,7 @@ import tempfile
 import numpy as np
 
 from benchmarks.common import Row, road, timer
+from repro.core.config import VSSConfig
 from repro.core.store import VSS
 from repro.storage import ReplicatedBackend
 
@@ -35,9 +36,9 @@ def run(scale: float = 1.0) -> list:
     dur = frames.shape[0] / 30.0
     rows: list = []
     root = tempfile.mkdtemp(prefix="vssbench25_")
-    vss = VSS(root, backend=ReplicatedBackend.local(
+    vss = VSS(root, config=VSSConfig(backend=ReplicatedBackend.local(
         os.path.join(root, "objects"), N_CHILDREN,
-    ))
+    )))
     try:
         _run(vss, frames, dur, rows)
     finally:

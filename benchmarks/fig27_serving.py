@@ -32,6 +32,7 @@ import urllib.request
 
 from benchmarks.common import Row, fresh_store, road, timer
 from repro.obs.registry import MetricsRegistry
+from repro.serving.config import ServiceConfig
 from repro.serving.service import VSSService
 
 CLIENTS = 8                 # the acceptance gate is "8+ concurrent"
@@ -125,8 +126,9 @@ def run(scale: float = 1.0) -> list:
 
         # -- pass 1: coalesced serving ------------------------------------
         reg_c = MetricsRegistry()
-        coalesced = VSSService(store, window_s=INTAKE_WINDOW_S,
-                               registry=reg_c)
+        coalesced = VSSService(
+            store, config=ServiceConfig(window_s=INTAKE_WINDOW_S),
+            registry=reg_c)
         try:
             wall_c, lats_c = _serve_pass(coalesced, views, reqs_per_client)
         finally:
@@ -147,8 +149,9 @@ def run(scale: float = 1.0) -> list:
                         "mean requests per dispatched read_batch"))
 
         # -- pass 2: per-request sequential control -----------------------
-        control = VSSService(store, window_s=0.0, max_batch=1,
-                             registry=MetricsRegistry())
+        control = VSSService(
+            store, config=ServiceConfig(window_s=0.0, max_batch=1),
+            registry=MetricsRegistry())
         try:
             wall_s, lats_s = _serve_pass(control, views, reqs_per_client)
         finally:
@@ -170,7 +173,9 @@ def run(scale: float = 1.0) -> list:
 
         # -- pass 3: overload honesty (deadline shedding) ------------------
         reg_o = MetricsRegistry()
-        qos = VSSService(store, window_s=INTAKE_WINDOW_S, registry=reg_o)
+        qos = VSSService(
+            store, config=ServiceConfig(window_s=INTAKE_WINDOW_S),
+            registry=reg_o)
         try:
             burst = CLIENTS
             statuses = [None] * burst

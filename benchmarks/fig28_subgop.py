@@ -20,6 +20,7 @@ import numpy as np
 
 from benchmarks.common import Row, road, timer
 from repro.core.spec import WriteSpec
+from repro.core.config import VSSConfig
 from repro.core.store import VSS
 from repro.storage import MemoryBackend
 
@@ -64,7 +65,7 @@ def _trim_bytes(frames) -> list:
     """Bytes moved by 3-frame edge trims vs whole-GOP reads."""
     root = tempfile.mkdtemp(prefix="vssbench28_trim_")
     backend = _CountingBackend(MemoryBackend())
-    vss = VSS(root, backend=backend)
+    vss = VSS(root, config=VSSConfig(backend=backend))
     try:
         vss.write("v", frames, fps=30.0, codec="tvc-hi",
                   gop_frames=GOP_FRAMES)
@@ -108,7 +109,7 @@ def _roi_speedup(frames) -> list:
         for name, tiles in (("untiled", None), ("tiled", TILES)):
             root = tempfile.mkdtemp(prefix=f"vssbench28_{name}_")
             roots.append(root)
-            vss = VSS(root, backend=MemoryBackend())
+            vss = VSS(root, config=VSSConfig(backend=MemoryBackend()))
             wr = vss.writer_spec(WriteSpec(
                 name="v", fps=30.0, codec="tvc-hi",
                 gop_frames=GOP_FRAMES // 2, tiles=tiles,

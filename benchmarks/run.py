@@ -49,6 +49,7 @@ MODULES = (
     "fig26_remote",
     "fig27_serving",
     "fig28_subgop",
+    "fig29_adaptive",
     "table2_joint_quality",
     "roofline",
 )

@@ -28,10 +28,12 @@ import urllib.request
 import numpy as np
 
 from repro import codec
+from repro.core.config import VSSConfig
 from repro.core.store import VSS
 from repro.data.video import synthesize_road
 from repro.obs import MetricsRegistry
 from repro.serving import AdmissionController, VSSService
+from repro.serving.config import ServiceConfig
 
 
 def post_read(base, body, tenant="demo"):
@@ -58,11 +60,12 @@ def fetch_frames(base, manifest):
 def main():
     root = tempfile.mkdtemp(prefix="vss_serve_")
     reg = MetricsRegistry(enabled=True)
-    vss = VSS(root, registry=reg)
+    vss = VSS(root, config=VSSConfig(registry=reg))
     clip = synthesize_road(120, width=192, height=108, seed=0)
     vss.write("traffic", clip, fps=30.0, codec="tvc-med", gop_frames=15)
 
-    service = VSSService(vss, window_s=0.02, registry=reg)
+    service = VSSService(vss, config=ServiceConfig(window_s=0.02),
+                         registry=reg)
     base = service.url
     print(f"serving {root} at {base}")
 
@@ -104,7 +107,8 @@ def main():
 
     # -- 3: QoS — tenant rate shed and deadline shed ----------------------
     strict = VSSService(
-        vss, window_s=0.02, registry=MetricsRegistry(enabled=True),
+        vss, config=ServiceConfig(window_s=0.02),
+        registry=MetricsRegistry(enabled=True),
         admission=AdmissionController(tenant_rate=1.0, tenant_burst=2),
     )
     try:

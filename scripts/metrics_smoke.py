@@ -61,12 +61,25 @@ REQUIRED_FAMILIES = (
     "vss_read_ranged_bytes_saved_total",
     "vss_tile_reads_total",
     "vss_tile_fetches_total",
+    # workload-adaptive format management: the access profiler observes
+    # every read; one adapt() tick exercises the policy counters
+    "vss_profiler_records_total",
+    "vss_profiler_persists_total",
+    "vss_profiler_view_configs",
+    "vss_profiler_heat_buckets",
+    "vss_adapt_runs_total",
+    "vss_adapt_materialize_total",
+    "vss_adapt_promote_total",
+    "vss_adapt_demote_total",
+    "vss_adapt_deferred_steps_total",
+    "vss_adapt_resize_total",
 )
 # vss_scrub_runs_total / vss_replica_* families are registered by
 # ReplicatedBackend only — the backend conformance suite covers them
 
 
 def main() -> int:
+    from repro.core.config import AdaptiveConfig, VSSConfig
     from repro.core.spec import ReadSpec
     from repro.core.store import VSS
     from repro.obs import MetricsRegistry
@@ -74,7 +87,10 @@ def main() -> int:
 
     reg = MetricsRegistry(enabled=True)
     tmp = tempfile.mkdtemp(prefix="vss-metrics-smoke-")
-    vss = VSS(tmp, backend="tiered:remote", registry=reg)
+    vss = VSS(tmp, config=VSSConfig(
+        backend="tiered:remote", registry=reg,
+        adaptive=AdaptiveConfig(enabled=True),
+    ))
 
     # -- mixed workload -------------------------------------------------
     rng = np.random.RandomState(7)
@@ -115,6 +131,17 @@ def main() -> int:
     flaky.fail_next(1)
     assert remote.get("smoke-probe") == b"metrics smoke payload"
     assert remote.retries >= 1, "injected fault did not exercise a retry"
+
+    # -- adaptive tick: profiler families must have observed the reads
+    # above, and one adapt() pass must tick the policy counters
+    for _ in range(3):
+        vss.read("cam0", t=(0.0, 1.0), resolution=(32, 24), cache=False)
+    report = vss.adapt()
+    assert reg.value("vss_profiler_records_total") >= 5, \
+        "access profiler did not observe the read workload"
+    assert reg.value("vss_adapt_runs_total") >= 1, \
+        "adapt() tick did not run the policy"
+    assert "materialized" in report
 
     vss.scrub()
 

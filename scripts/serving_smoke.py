@@ -74,18 +74,21 @@ def _post(base, body, tenant):
 
 def main() -> int:
     from repro import codec
+    from repro.core.config import VSSConfig
     from repro.core.store import VSS
     from repro.obs import MetricsRegistry
+    from repro.serving.config import ServiceConfig
     from repro.serving.service import VSSService
 
     reg = MetricsRegistry(enabled=True)
     tmp = tempfile.mkdtemp(prefix="vss-serving-smoke-")
-    vss = VSS(tmp, registry=reg)
+    vss = VSS(tmp, config=VSSConfig(registry=reg))
     rng = np.random.RandomState(7)
     clip = rng.randint(0, 255, (60, 48, 64, 3), np.uint8)
     vss.write("cam0", clip, fps=30.0, codec="tvc-med", gop_frames=10)
 
-    service = VSSService(vss, window_s=0.05, registry=reg)
+    service = VSSService(vss, config=ServiceConfig(window_s=0.05),
+                         registry=reg)
     base = service.url
 
     # -- concurrent mixed-tenant burst, one past-deadline ----------------

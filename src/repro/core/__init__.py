@@ -1,9 +1,17 @@
 """The paper's primary contribution: the VSS storage manager."""
+from repro.core.config import (  # noqa: F401
+    AdaptiveConfig,
+    DeferredConfig,
+    IngestConfig,
+    TieringConfig,
+    VSSConfig,
+)
 from repro.core.ingest import (  # noqa: F401
     IngestPipeline,
     IngestStats,
     PublishWindow,
 )
+from repro.core.profile import AccessProfiler, AdaptivePolicy  # noqa: F401
 from repro.core.spec import ReadSpec, ResolvedRead, WriteSpec  # noqa: F401
 from repro.core.store import VSS, ReadResult, VSSWriter, resample  # noqa: F401
 from repro.core.types import (  # noqa: F401

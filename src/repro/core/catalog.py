@@ -524,6 +524,35 @@ class Catalog:
                 out.update(rows)
         return out
 
+    def spans_for_paths(self, paths: Sequence[str]) -> dict:
+        """{object key: (logical, t_start, t_end)} for the given GOP
+        keys — lets the adaptive tiering policy translate hot-tier
+        object keys back into the video-time intervals the access
+        profiler scores.  Keys the catalog doesn't know (joint
+        segments, tile objects) are simply absent, mirroring
+        `lru_for_paths`."""
+        out: dict = {}
+        if not paths:
+            return out
+        chunk = 500
+        with self._lock:
+            for i in range(0, len(paths), chunk):
+                part = list(paths[i : i + chunk])
+                marks = ",".join("?" * len(part))
+                rows = self._conn.execute(
+                    "SELECT g.path, p.logical, p.fps, p.t_start,"
+                    " g.start_frame, g.num_frames"
+                    " FROM gop g JOIN physical p ON g.physical_id = p.id"
+                    f" WHERE g.path IN ({marks})",
+                    part,
+                ).fetchall()
+                for path, logical, fps, t0, sf, nf in rows:
+                    fps = fps or 1.0
+                    out[path] = (
+                        logical, t0 + sf / fps, t0 + (sf + nf) / fps
+                    )
+        return out
+
     def total_bytes(self, logical: str) -> int:
         with self._lock:
             row = self._conn.execute(

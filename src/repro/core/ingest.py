@@ -333,6 +333,38 @@ class IngestPipeline:
             self._paused = False
             self._cv.notify_all()
 
+    def resize(
+        self,
+        *,
+        workers: Optional[int] = None,
+        queue_gops: Optional[int] = None,
+    ) -> None:
+        """Grow the pipeline at runtime — the adaptive policy's
+        auto-sizing seam.  The worker pool only grows (a shrink request
+        is ignored: retiring a thread mid-publish buys nothing and
+        complicates the error protocol); the queue bound may move in
+        either direction, waking blocked submitters when it grows.  A
+        ``workers=0`` pipeline is synchronous by construction and stays
+        that way."""
+        with self._cv:
+            if self._stop:
+                return
+            if queue_gops is not None:
+                if queue_gops < 1:
+                    raise ValueError(
+                        f"queue_gops must be >= 1, got {queue_gops}")
+                self.queue_gops = queue_gops
+            if workers is not None and self._threads:
+                grow = int(workers) - len(self._threads)
+                for _ in range(max(0, grow)):
+                    t = threading.Thread(
+                        target=self._worker, daemon=True,
+                        name=f"vss-ingest-{len(self._threads)}",
+                    )
+                    self._threads.append(t)
+                    t.start()
+            self._cv.notify_all()
+
     def stats(self) -> IngestStats:
         with self._cv:
             return IngestStats(

@@ -59,8 +59,10 @@ from repro import obs as _obs
 from repro import storage as _storage
 from repro.core import compact as _compact
 from repro.core import ingest as _ingest
+from repro.core import profile as _profile
 from repro.core.cache import CacheManager, CachePolicy
 from repro.core.catalog import Catalog
+from repro.core.config import VSSConfig, config_from_legacy
 from repro.core.cost import ETA, CostModel, calibration_path
 from repro.core.deferred import DeferredCompressor, is_wrapped, unwrap_bytes
 from repro.core.quality import QualityEstimator, exact_mse
@@ -311,25 +313,61 @@ class StoreStats(_Mapping):
         return len(dataclasses.fields(self))
 
 
+_UNSET = object()  # legacy-kwarg sentinel: None is a meaningful value
+
+
 class VSS:
     def __init__(
         self,
         root: str,
         *,
-        backend=None,  # StorageBackend | spec string | None (env/default)
-        budget_multiple: float = DEFAULT_BUDGET_MULTIPLE,
-        solver: str = "dp",
-        cost_model: Optional[CostModel] = None,
-        cache_policy: Optional[CachePolicy] = None,
-        enable_deferred: bool = True,
-        enable_compaction: bool = True,
-        use_pallas: Optional[bool] = None,
-        pipelined_ingest: bool = True,
-        ingest_workers: int = _ingest.DEFAULT_WORKERS,
-        ingest_queue_gops: int = _ingest.DEFAULT_QUEUE_GOPS,
-        registry: Optional[_obs.MetricsRegistry] = None,
-        trace_capacity: int = _obs.DEFAULT_TRACE_CAPACITY,
+        config: Optional[VSSConfig] = None,
+        # -- deprecated keyword arguments (pre-VSSConfig construction
+        # surface).  Each still works, folds into `config`, and emits a
+        # DeprecationWarning; see `repro.core.config.LEGACY_KWARGS`.
+        backend=_UNSET,
+        budget_multiple=_UNSET,
+        solver=_UNSET,
+        cost_model=_UNSET,
+        cache_policy=_UNSET,
+        enable_deferred=_UNSET,
+        enable_compaction=_UNSET,
+        use_pallas=_UNSET,
+        pipelined_ingest=_UNSET,
+        ingest_workers=_UNSET,
+        ingest_queue_gops=_UNSET,
+        registry=_UNSET,
+        trace_capacity=_UNSET,
     ):
+        legacy = {
+            name: value
+            for name, value in (
+                ("backend", backend),
+                ("budget_multiple", budget_multiple),
+                ("solver", solver),
+                ("cost_model", cost_model),
+                ("cache_policy", cache_policy),
+                ("enable_deferred", enable_deferred),
+                ("enable_compaction", enable_compaction),
+                ("use_pallas", use_pallas),
+                ("pipelined_ingest", pipelined_ingest),
+                ("ingest_workers", ingest_workers),
+                ("ingest_queue_gops", ingest_queue_gops),
+                ("registry", registry),
+                ("trace_capacity", trace_capacity),
+            )
+            if value is not _UNSET
+        }
+        if legacy:
+            warnings.warn(
+                f"VSS keyword argument(s) {sorted(legacy)} are deprecated;"
+                " pass VSS(root, config=VSSConfig(...)) instead"
+                " (see docs/api.md for the field mapping)",
+                DeprecationWarning, stacklevel=2,
+            )
+            config = config_from_legacy(config, legacy)
+        config = (config if config is not None else VSSConfig()).with_env()
+        self.config = config
         self.root = root
         os.makedirs(root, exist_ok=True)
         # telemetry: one registry threaded through every layer this
@@ -339,12 +377,14 @@ class VSS:
         # one process expose one /metrics view while each component's
         # own handles keep per-instance stats exact.
         self.registry = (
-            registry if registry is not None else _obs.default_registry()
+            config.registry if config.registry is not None
+            else _obs.default_registry()
         )
         self.tracer = _obs.Tracer(
-            capacity=trace_capacity, enabled=self.registry.enabled
+            capacity=config.trace_capacity, enabled=self.registry.enabled
         )
         self.catalog = Catalog(os.path.join(root, "catalog.sqlite"))
+        backend = config.backend
         if backend is None:
             backend = os.environ.get(_storage.ENV_VAR, _storage.DEFAULT_SPEC)
         made_backend = isinstance(backend, str)
@@ -352,6 +392,7 @@ class VSS:
             backend = _storage.make_backend(
                 backend, os.path.join(root, "objects"),
                 registry=self.registry,
+                hot_bytes=config.tiering.hot_bytes,
             )
         self.backend = backend
         tiered = _storage.unwrap(backend, _storage.TieredBackend)
@@ -363,7 +404,7 @@ class VSS:
         # to cover the ingest worker pool — at least one connection per
         # concurrently-publishing worker; a minimum hint, so it never
         # shrinks a pool sized larger for read fan-out
-        backend.configure_concurrency(max(1, int(ingest_workers)))
+        backend.configure_concurrency(max(1, int(config.ingest.workers)))
         # layout guard: the scavenger treats unresolvable keys as lost
         # data, so opening an existing store under a different placement
         # scheme must fail loudly instead of wiping the catalog
@@ -397,8 +438,9 @@ class VSS:
             # with no physicals is a pre-flush crash turd — drop it
             self.catalog.drop_empty_logicals()
         self.catalog.set_meta("clean_shutdown", "0")
-        self.budget_multiple = budget_multiple
-        self.solver = solver
+        self.budget_multiple = config.budget_multiple
+        self.solver = config.solver
+        cost_model = config.cost_model
         if cost_model is None:
             # install-time calibration (α table + measured io_table)
             # persists next to the catalog; load it when present,
@@ -416,22 +458,53 @@ class VSS:
                         " calibrate_io() to replace it"
                     )
         self.cost_model = cost_model or CostModel.default()
-        self.policy = cache_policy or CachePolicy()
+        self.policy = config.cache
         self.cache = CacheManager(self.catalog, self.policy,
                                   backend=self.backend)
         self.quality = QualityEstimator()
-        self.deferred = DeferredCompressor(self.catalog, self.policy,
-                                           backend=self.backend)
-        self.enable_deferred = enable_deferred
-        self.enable_compaction = enable_compaction
-        self.use_pallas = use_pallas
+        self.deferred = DeferredCompressor(
+            self.catalog, self.policy,
+            activation_fraction=config.deferred.activation_fraction,
+            backend=self.backend,
+        )
+        self.enable_deferred = config.deferred.enabled
+        self.enable_compaction = config.compaction
+        self.use_pallas = config.use_pallas
         # shared per-store ingest pipeline (§4 write path): created
         # lazily so read-only stores never spawn worker threads
-        self.pipelined_ingest = pipelined_ingest
-        self.ingest_workers = ingest_workers
-        self.ingest_queue_gops = ingest_queue_gops
+        self.pipelined_ingest = config.ingest.pipelined
+        self.ingest_workers = config.ingest.workers
+        self.ingest_queue_gops = config.ingest.queue_gops
+        if config.ingest.autosize:
+            # derive initial pipeline sizing from the calibrated
+            # io_table: a slow publish round trip needs more windows in
+            # flight (profile.py); runtime growth on backpressure is
+            # the adaptive policy's job
+            self.ingest_workers, self.ingest_queue_gops = (
+                _profile.suggest_ingest_sizing(self.cost_model,
+                                               self.backend)
+            )
+            self.backend.configure_concurrency(max(1, self.ingest_workers))
         self._ingest: Optional[_ingest.IngestPipeline] = None
         self._ingest_init = threading.Lock()
+        # -- workload-adaptive format management (profile.py) -------------
+        self.profiler: Optional[_profile.AccessProfiler] = None
+        self.adaptive: Optional[_profile.AdaptivePolicy] = None
+        if config.adaptive.profile or config.adaptive.enabled:
+            self.profiler = _profile.AccessProfiler(
+                _profile.profile_path(root),
+                half_life_s=config.adaptive.half_life_s,
+                interval_s=config.adaptive.interval_s,
+                persist_every=config.adaptive.persist_every,
+                registry=self.registry,
+            )
+        if config.adaptive.enabled:
+            self.adaptive = _profile.AdaptivePolicy(
+                self, self.profiler, config.adaptive)
+            if tiered is not None:
+                # heat-boosted spill order: same LRU_VSS base, but
+                # objects in hot intervals outrank every cold one
+                tiered.set_priority_fn(self.adaptive.priority_fn)
         # §3 planner / read-path telemetry (all no-ops when the registry
         # is disabled).  Counters are per-store handles: `stats()` reads
         # them back exactly, /metrics sums them across stores.
@@ -644,6 +717,10 @@ class VSS:
     def _read_batch(self, specs: List[ReadSpec]) -> List[ReadResult]:
         snap = _CatalogSnapshot(self.catalog)
         resolved = [sp.resolve(snap.original(sp.name)) for sp in specs]
+        if self.profiler is not None:
+            # pure observation, after resolve and before planning: the
+            # profile never changes what this batch plans or returns
+            self.profiler.record_batch(resolved)
         # per-spec trace roots (plan → fetch → decode → admit children);
         # None when telemetry is off — zero span bookkeeping on the
         # disabled path
@@ -1738,7 +1815,20 @@ class VSS:
             self._ingest.barrier({name})
         for key in self.catalog.drop_logical(name):
             self.backend.delete(key)
+        if self.profiler is not None:
+            self.profiler.forget(name)
         self._notify_write(name)
+
+    def adapt(self) -> Dict:
+        """Run one adaptive-policy tick (profile.py): materialize hot
+        derived views ahead of demand, promote/demote tier placement by
+        interval heat, schedule deferred compression around live
+        ingest, and grow the pipeline under backpressure.  Returns a
+        report of the decisions taken.  A no-op (empty report) unless
+        ``config.adaptive.enabled``."""
+        if self.adaptive is None:
+            return {"enabled": False}
+        return self.adaptive.run_once()
 
     def calibrate_io(
         self, backends: Optional[Dict[str, _storage.StorageBackend]] = None,
@@ -1778,6 +1868,11 @@ class VSS:
             self._ingest.drain()
             self._ingest.close()
         self.deferred.stop_background()
+        if self.profiler is not None:
+            try:
+                self.profiler.save()  # the profile survives reopen
+            except OSError:
+                pass  # a full disk must not block a clean shutdown
         self.catalog.set_meta("clean_shutdown", "1")
         self.catalog.close()
         self.backend.close()
@@ -1960,6 +2055,14 @@ class VSSWriter:
             raise
         self._next_frame = start
         self._bytes_written += window.nbytes
+        # provisional budget: grows with the stream so cache admission
+        # (and the adaptive policy's ahead-of-demand materialization)
+        # works DURING live ingest — a zero budget until close() would
+        # evict every view the moment it lands.  close() writes the
+        # final figure with the same formula.
+        self.store.catalog.set_budget(self.name, self.budget_bytes or int(
+            self.store.budget_multiple * max(self._bytes_written, 1)
+        ))
         # the video's readable state is advancing (the pipeline indexes
         # asynchronously, but readers barrier on this video before
         # planning, so invalidating at handoff is always conservative)

@@ -51,11 +51,14 @@ import secrets
 import threading
 import time
 import urllib.parse
+import warnings
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, List, Optional
 
 from repro import codec as _codec
+from repro.core.config import strict_keys
 from repro.core.spec import ReadSpec
+from repro.serving.config import ServiceConfig
 from repro.serving.coalesce import (
     DEFAULT_INTAKE_WINDOW_S,
     DEFAULT_MAX_BATCH,
@@ -85,14 +88,10 @@ _SPEC_FIELDS = (
 def spec_from_json(obj: dict) -> ReadSpec:
     """Build a validated `ReadSpec` from a decoded JSON body; unknown
     keys are rejected so typos fail loudly instead of silently serving
-    the wrong view."""
-    if not isinstance(obj, dict):
-        raise ValueError(f"request body must be a JSON object, got"
-                         f" {type(obj).__name__}")
-    unknown = set(obj) - set(_SPEC_FIELDS)
-    if unknown:
-        raise ValueError(f"unknown ReadSpec fields {sorted(unknown)}")
-    kwargs = {k: obj[k] for k in _SPEC_FIELDS if obj.get(k) is not None}
+    the wrong view.  (The same `strict_keys` contract validates config
+    files — `repro.serving.config`.)"""
+    data = strict_keys(obj, _SPEC_FIELDS, "ReadSpec")
+    kwargs = {k: v for k, v in data.items() if v is not None}
     if "name" not in kwargs:
         raise ValueError("ReadSpec needs a 'name'")
     return ReadSpec(**kwargs)
@@ -191,26 +190,51 @@ class VSSService:
     benchmark control for the coalescing win.
     """
 
+    _UNSET = object()  # legacy-kwarg sentinel
+
     def __init__(
         self,
         vss,
         *,
-        host: str = "127.0.0.1",
-        port: int = 0,
-        window_s: float = DEFAULT_INTAKE_WINDOW_S,
-        max_batch: int = DEFAULT_MAX_BATCH,
+        config: Optional[ServiceConfig] = None,
+        # live-object injection (not config — a config file can't carry
+        # a pre-built controller, signer, or registry)
         admission: Optional[AdmissionController] = None,
         signer: Optional[UrlSigner] = None,
-        url_ttl_s: float = DEFAULT_TTL_S,
         registry=None,
+        # -- deprecated keyword arguments (pre-ServiceConfig surface) --
+        host=_UNSET,
+        port=_UNSET,
+        window_s=_UNSET,
+        max_batch=_UNSET,
+        url_ttl_s=_UNSET,
     ):
+        legacy = {
+            name: value
+            for name, value in (
+                ("host", host), ("port", port), ("window_s", window_s),
+                ("max_batch", max_batch), ("url_ttl_s", url_ttl_s),
+            )
+            if value is not VSSService._UNSET
+        }
+        if legacy:
+            warnings.warn(
+                f"VSSService keyword argument(s) {sorted(legacy)} are"
+                " deprecated; pass VSSService(vss,"
+                " config=ServiceConfig(...)) instead",
+                DeprecationWarning, stacklevel=2,
+            )
+            config = (config or ServiceConfig()).replace(**legacy)
+        config = config or ServiceConfig()
+        self.config = config
         self.vss = vss
         reg = registry if registry is not None else vss.registry
         self.registry = reg
-        self.admission = admission or AdmissionController(registry=reg)
-        self.signer = signer or UrlSigner(ttl_s=url_ttl_s)
+        self.admission = admission or config.admission.build(registry=reg)
+        self.signer = signer or UrlSigner(ttl_s=config.url_ttl_s)
         self.coalescer = BatchCoalescer(
-            vss, window_s=window_s, max_batch=max_batch, registry=reg
+            vss, window_s=config.window_s, max_batch=config.max_batch,
+            registry=reg,
         )
         self.manifests = _ManifestCache(vss, reg)
         self._parked: Dict[str, _Parked] = {}
@@ -223,7 +247,7 @@ class VSSService:
         self._c_requests: Dict[str, object] = {}
         self._c_shed: Dict[str, object] = {}
         self._req_lock = threading.Lock()
-        self._httpd = _ServiceServer((host, port), self)
+        self._httpd = _ServiceServer((config.host, config.port), self)
         self._thread = threading.Thread(
             target=self._httpd.serve_forever, daemon=True,
             name="vss-serve-http",
@@ -576,27 +600,54 @@ class _ServiceHandler(BaseHTTPRequestHandler):
 def main(argv=None) -> None:  # pragma: no cover - operational entry point
     import argparse
 
+    from repro.core.config import VSSConfig
     from repro.core.store import VSS
+    from repro.serving.config import boot_from_json
 
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--root", required=True, help="VSS store root")
+    ap.add_argument("--config", default=None,
+                    help="JSON boot file ({root, store, service} — see"
+                         " repro.serving.config); CLI flags override it")
+    ap.add_argument("--root", default=None, help="VSS store root")
     ap.add_argument("--backend", default=None,
                     help="make_backend spec (default: store/env default)")
-    ap.add_argument("--host", default="127.0.0.1")
-    ap.add_argument("--port", type=int, default=8090)
-    ap.add_argument("--window-ms", type=float,
-                    default=DEFAULT_INTAKE_WINDOW_S * 1000.0,
+    ap.add_argument("--host", default=None)
+    ap.add_argument("--port", type=int, default=None)
+    ap.add_argument("--window-ms", type=float, default=None,
                     help="coalescing intake window (0 disables)")
-    ap.add_argument("--max-batch", type=int, default=DEFAULT_MAX_BATCH)
-    ap.add_argument("--url-ttl-s", type=float, default=DEFAULT_TTL_S)
+    ap.add_argument("--max-batch", type=int, default=None)
+    ap.add_argument("--url-ttl-s", type=float, default=None)
     args = ap.parse_args(argv)
-    vss = VSS(args.root, backend=args.backend)
-    service = VSSService(
-        vss, host=args.host, port=args.port,
-        window_s=args.window_ms / 1000.0, max_batch=args.max_batch,
-        url_ttl_s=args.url_ttl_s,
-    )
-    print(f"serving VSS store {args.root} at {service.url}", flush=True)
+    if args.config:
+        with open(args.config) as f:
+            doc = json.load(f)
+        if args.root:
+            doc["root"] = args.root
+        svc = dict(doc.get("service", {}))
+        for field, value in (
+            ("host", args.host), ("port", args.port),
+            ("max_batch", args.max_batch), ("url_ttl_s", args.url_ttl_s),
+            ("window_s", None if args.window_ms is None
+             else args.window_ms / 1000.0),
+        ):
+            if value is not None:
+                svc[field] = value
+        if svc:
+            doc["service"] = svc
+        vss, service = boot_from_json(doc)
+    else:
+        if not args.root:
+            ap.error("--root (or --config) is required")
+        vss = VSS(args.root, config=VSSConfig(backend=args.backend))
+        service = VSSService(vss, config=ServiceConfig(
+            host=args.host or "127.0.0.1",
+            port=8090 if args.port is None else args.port,
+            window_s=(DEFAULT_INTAKE_WINDOW_S if args.window_ms is None
+                      else args.window_ms / 1000.0),
+            max_batch=args.max_batch or DEFAULT_MAX_BATCH,
+            url_ttl_s=args.url_ttl_s or DEFAULT_TTL_S,
+        ))
+    print(f"serving VSS store at {service.url}", flush=True)
     try:
         threading.Event().wait()
     except KeyboardInterrupt:

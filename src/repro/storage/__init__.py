@@ -35,7 +35,7 @@ Backends
     errors, torn writes, hang-then-recover) for any of the above; the
     shared test infrastructure behind the conformance/chaos suites.
 
-Selection: ``VSS(root, backend=...)`` accepts an instance or a spec
+Selection: ``VSSConfig(backend=...)`` accepts an instance or a spec
 string; with neither, the ``VSS_STORAGE_BACKEND`` env var (default
 ``local``) decides, so every benchmark runs against every backend.
 
@@ -44,6 +44,8 @@ Spec grammar (see `make_backend`):
     | replicated[:<N>[:<R>[:<W>]]] | remote[:<url>]
 """
 from __future__ import annotations
+
+from typing import Optional
 
 from repro.storage.base import (
     ObjectNotFound,
@@ -72,7 +74,8 @@ DEFAULT_SPEC = "local"
 
 
 def make_backend(spec: str, root: str, *, registry=None,
-                 instrument: bool = True) -> StorageBackend:
+                 instrument: bool = True,
+                 hot_bytes: Optional[int] = None) -> StorageBackend:
     """Build a backend from a spec string; ``root`` anchors fs-backed
     layouts (each spec owns a distinct subtree so they never collide).
 
@@ -128,9 +131,10 @@ def make_backend(spec: str, root: str, *, registry=None,
         # a remote cold tier gets the write-back composition (ISSUE:
         # fast local cache over a slow object store); every other cold
         # tier keeps the durable write-through discipline
+        tier_kw = {} if hot_bytes is None else {"hot_bytes": hot_bytes}
         return _wrap(TieredBackend(
             cold, write_back=unwrap(cold, RemoteBackend) is not None,
-            registry=registry,
+            registry=registry, **tier_kw,
         ), "tiered")
     if head == "replicated":
         parts = [int(p) for p in rest.split(":") if p] if rest else []

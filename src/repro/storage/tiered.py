@@ -406,6 +406,35 @@ class TieredBackend(StorageBackend):
             if err is not None:
                 time.sleep(_FLUSH_RETRY_DELAY)
 
+    def demote(self, keys: Sequence[str]) -> int:
+        """Explicitly evict the given objects from the hot tier — the
+        adaptive policy's cold-epoch seam.  Never destroys data: a
+        dirty object is flushed to the cold tier first, and objects
+        pinned by terminal flush failures (or mid-flight) are skipped.
+        Returns how many hot copies were dropped."""
+        with self._lock:
+            targets = [k for k in keys if k in self._hot]
+        if not targets:
+            return 0
+        if self.write_back:
+            with self._lock:
+                dirty = [k for k in targets if k in self._dirty]
+            if dirty:
+                try:
+                    self.flush(dirty)
+                except RuntimeError:
+                    pass  # pinned keys stay hot; drop what settled
+        dropped = 0
+        with self._cv:
+            for k in targets:
+                if (k in self._hot and k not in self._dirty
+                        and k not in self._inflight
+                        and k not in self._failed):
+                    self._drop_one_locked(k)
+                    self._c_spills.inc()
+                    dropped += 1
+        return dropped
+
     def retry_failed(self) -> int:
         """Un-pin terminally-failed write-back objects (after the cold
         tier recovers): their failure state clears, they stay dirty,

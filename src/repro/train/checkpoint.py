@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.config import DeferredConfig, VSSConfig
 from repro.core.store import VSS
 
 FRAME_H, FRAME_W, FRAME_C = 64, 128, 3
@@ -142,15 +143,15 @@ class CheckpointManager:
         # created it.  Callers with a dedicated replicated/sharded
         # checkpoint volume pass their own ``vss``.
         if vss is None:
-            store_kw = dict(
-                enable_deferred=False,  # deferred compression driven here
-                enable_compaction=False,
+            cfg = VSSConfig(
+                deferred=DeferredConfig(enabled=False),  # driven here
+                compaction=False,
             )
             try:
-                vss = VSS(os.path.join(root, "vss"), backend="local",
-                          **store_kw)
+                vss = VSS(os.path.join(root, "vss"),
+                          config=cfg.replace(backend="local"))
             except ValueError:
-                vss = VSS(os.path.join(root, "vss"), **store_kw)
+                vss = VSS(os.path.join(root, "vss"), config=cfg)
         self.vss = vss
         self._manifest_path = os.path.join(root, f"{run}.manifest.json")
         self._manifest: Dict[str, Dict] = self._load_manifest()
