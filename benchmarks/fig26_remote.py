@@ -20,6 +20,7 @@ round trip instead of a syscall.  Measures
 """
 from __future__ import annotations
 
+import os
 import shutil
 import tempfile
 
@@ -118,6 +119,47 @@ def run(scale: float = 1.0) -> list:
         for key, data in wb_items[:3]:  # spot-check the flush landed
             assert store.inner.get(key) == data
         wb.close()
+
+        # -- journal overhead: crash-durable write-back (each admission
+        # group journaled under ONE fsync) must stay within 15% of the
+        # journal-less path, measured over the full acknowledge+flush
+        # cycle — the durability bill a caller actually pays.  A single
+        # flush timing swings ~2x on a loaded 2-core CI box, so the
+        # gate compares best-of-3 interleaved trials.
+        def _wb_cycle(journal_dir):
+            tier = TieredBackend(
+                RemoteBackend(server.url, connections=4),
+                write_back=True, journal_dir=journal_dir,
+            )
+            objs = _objects(n, seed=3)
+            with timer() as t_put:
+                tier.batch_put(objs)
+            with timer() as t_fl:
+                tier.flush()
+            tier.close()
+            return t_put[0], t_fl[0]
+
+        trials_off, trials_on = [], []
+        for _ in range(3):
+            trials_off.append(_wb_cycle(None))
+            jroot = tempfile.mkdtemp(prefix="vssbench26j_")
+            trials_on.append(_wb_cycle(os.path.join(jroot, "_journal")))
+            shutil.rmtree(jroot, ignore_errors=True)
+        bp, bf = min(trials_on, key=lambda pf: pf[0] + pf[1])
+        rows.append(Row("fig26", "writeback_put_journaled", bp, "s",
+                        "hot admit + one fsync'd journal append"))
+        rows.append(Row("fig26", "writeback_flush_journaled", bf,
+                        "s", "upload + journal commit records"))
+        off = min(p + f for p, f in trials_off)
+        on = min(p + f for p, f in trials_on)
+        overhead = on / max(off, 1e-9) - 1.0
+        rows.append(Row("fig26", "journal_overhead", overhead * 100.0, "%",
+                        "acknowledge+flush, journal on vs off"))
+        # 20ms absolute grace absorbs timer noise at --quick scale
+        assert on <= off * 1.15 + 0.02, (
+            f"journal must cost <15% of write-back throughput:"
+            f" {off * 1e3:.1f}ms journal-off vs {on * 1e3:.1f}ms on"
+        )
     finally:
         server.close()
         shutil.rmtree(root, ignore_errors=True)

@@ -73,6 +73,16 @@ REQUIRED_FAMILIES = (
     "vss_adapt_demote_total",
     "vss_adapt_deferred_steps_total",
     "vss_adapt_resize_total",
+    # crash-durable write-back: the journal ticks on every dirty
+    # admission of a tiered:remote store (on by default)
+    "vss_journal_appends_total",
+    "vss_journal_bytes_total",
+    "vss_journal_fsyncs_total",
+    "vss_journal_segments",
+    "vss_journal_pending_objects",
+    # signed-request auth: one accepted and one rejected request below
+    "vss_remote_auth_accepted_total",
+    "vss_remote_auth_rejected_total",
 )
 # vss_scrub_runs_total / vss_replica_* families are registered by
 # ReplicatedBackend only — the backend conformance suite covers them
@@ -131,6 +141,36 @@ def main() -> int:
     flaky.fail_next(1)
     assert remote.get("smoke-probe") == b"metrics smoke payload"
     assert remote.retries >= 1, "injected fault did not exercise a retry"
+
+    # -- durability + auth: the write-back journal must have ticked on
+    # ingest (tiered:remote keeps one by default), and a secret-armed
+    # server must count one accepted and one rejected request
+    from repro.storage import MemoryBackend, ObjectServer, RemoteAuthError
+
+    assert reg.value("vss_journal_appends_total") >= 1, \
+        "write-back ingest journaled nothing"
+    assert reg.value("vss_journal_fsyncs_total") >= 1, \
+        "journal appends paid no fsync barrier"
+    secret = b"metrics-smoke-secret"
+    auth_server = ObjectServer(MemoryBackend(), secret=secret, registry=reg)
+    signed = RemoteBackend(auth_server.url, secret=secret,
+                           backoff_base=0.01)
+    anon = RemoteBackend(auth_server.url, backoff_base=0.01)
+    try:
+        signed.put("k", b"authenticated")
+        assert signed.get("k") == b"authenticated"
+        try:
+            anon.get("k")
+            raise AssertionError("unauthenticated request was accepted")
+        except RemoteAuthError:
+            pass
+        assert anon.retries == 0, "401 must never be retried"
+    finally:
+        signed.close()
+        anon.close()
+        auth_server.close()
+    assert reg.value("vss_remote_auth_accepted_total") >= 1
+    assert reg.value("vss_remote_auth_rejected_total") >= 1
 
     # -- adaptive tick: profiler families must have observed the reads
     # above, and one adapt() pass must tick the policy counters

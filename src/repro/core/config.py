@@ -41,6 +41,8 @@ from repro.core import deferred as _deferred
 from repro.core import ingest as _ingest
 from repro.core.cache import CachePolicy
 from repro.obs import DEFAULT_TRACE_CAPACITY
+from repro.storage.journal import DEFAULT_SEGMENT_BYTES
+from repro.storage.signing import DEFAULT_SIG_TTL_S
 from repro.storage.tiered import DEFAULT_HOT_BYTES
 
 ENV_PREFIX = "VSS"
@@ -107,6 +109,28 @@ class TieringConfig:
     wins)."""
 
     hot_bytes: int = DEFAULT_HOT_BYTES
+    # crash-durable write-back: journal every dirty admission under
+    # <root>/objects/_journal (fsync'd before the put returns) so a
+    # crash never drops an acknowledged write.  Only applies to the
+    # write-back composition (tiered over a remote cold tier).
+    journal: bool = True
+    journal_segment_bytes: int = DEFAULT_SEGMENT_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class RemoteConfig:
+    """Authenticated transport for spec-built remote backends.
+
+    ``secret`` arms HMAC signed-request auth (`repro.storage.signing`)
+    on every remote client the backend spec builds — and on the
+    self-hosted loopback server's side too; the ``VSS_REMOTE_SECRET``
+    env var provisions it without touching code.  ``ca_file`` points
+    at a PEM bundle to trust for ``remotes:<url>`` (how a self-signed
+    deployment pins its server certificate)."""
+
+    secret: Optional[str] = None
+    sig_ttl_s: float = DEFAULT_SIG_TTL_S
+    ca_file: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,12 +168,12 @@ class AdaptiveConfig:
 _CONFIG_FIELDS = (
     "backend", "budget_multiple", "solver", "cost_model", "cache",
     "deferred", "compaction", "use_pallas", "ingest", "tiering",
-    "adaptive", "registry", "trace_capacity",
+    "remote", "adaptive", "registry", "trace_capacity",
 )
 # live-object fields: excluded from env overrides and JSON parsing
 _OPAQUE_FIELDS = frozenset(("cost_model", "registry"))
 # fields whose Optional[...] default hides the leaf type from inference
-_OPTIONAL_TYPES = {"use_pallas": bool}
+_OPTIONAL_TYPES = {"use_pallas": bool, "secret": str, "ca_file": str}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +193,7 @@ class VSSConfig:
     use_pallas: Optional[bool] = None
     ingest: IngestConfig = dataclasses.field(default_factory=IngestConfig)
     tiering: TieringConfig = dataclasses.field(default_factory=TieringConfig)
+    remote: RemoteConfig = dataclasses.field(default_factory=RemoteConfig)
     adaptive: AdaptiveConfig = dataclasses.field(
         default_factory=AdaptiveConfig)
     registry: Any = None  # Optional[MetricsRegistry]

@@ -393,6 +393,12 @@ class VSS:
                 backend, os.path.join(root, "objects"),
                 registry=self.registry,
                 hot_bytes=config.tiering.hot_bytes,
+                journal=config.tiering.journal,
+                journal_segment_bytes=config.tiering.journal_segment_bytes,
+                secret=(config.remote.secret.encode()
+                        if config.remote.secret else None),
+                sig_ttl_s=config.remote.sig_ttl_s,
+                ca_file=config.remote.ca_file,
             )
         self.backend = backend
         tiered = _storage.unwrap(backend, _storage.TieredBackend)

@@ -41,15 +41,24 @@ string; with neither, the ``VSS_STORAGE_BACKEND`` env var (default
 
 Spec grammar (see `make_backend`):
     local | local:fsync | memory | sharded:<N> | tiered[:<cold spec>]
-    | replicated[:<N>[:<R>[:<W>]]] | remote[:<url>]
+    | replicated[:<N>[:<R>[:<W>]]] | remote[:<url>] | remotes:<url>
+
+``remotes:<url>`` is the untrusted-network composition: TLS on the
+wire plus HMAC signed-request auth when a shared secret is provisioned
+(``VSS_REMOTE_SECRET`` or ``VSSConfig.remote.secret``).  A write-back
+``tiered:remote*`` store additionally keeps a crash-durable journal of
+acknowledged-but-unflushed objects (`repro.storage.journal`), so a
+process crash never loses an acknowledged write.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 from repro.storage.base import (
     ObjectNotFound,
     ObjectStat,
+    RangeNotSatisfiable,
     RecoveryReport,
     ScrubReport,
     StorageBackend,
@@ -57,25 +66,34 @@ from repro.storage.base import (
 )
 from repro.storage.faults import FaultInjectingBackend, InjectedFault
 from repro.storage.httpserver import ObjectServer
+from repro.storage.journal import WriteBackJournal
 from repro.storage.localfs import LocalFSBackend
 from repro.storage.memory import MemoryBackend
 from repro.storage.recovery import scavenge, scrub, validate_gop_bytes
-from repro.storage.remote import RemoteBackend, RemoteError
+from repro.storage.remote import RemoteAuthError, RemoteBackend, RemoteError
 from repro.storage.replicated import (
     ChildDownError,
     ReplicatedBackend,
     ReplicationError,
 )
 from repro.storage.sharded import HashRing, ShardedBackend
+from repro.storage.signing import RequestSigner
 from repro.storage.tiered import TieredBackend
 
 ENV_VAR = "VSS_STORAGE_BACKEND"
 DEFAULT_SPEC = "local"
+SECRET_ENV_VAR = "VSS_REMOTE_SECRET"
+JOURNAL_DIRNAME = "_journal"
 
 
 def make_backend(spec: str, root: str, *, registry=None,
                  instrument: bool = True,
-                 hot_bytes: Optional[int] = None) -> StorageBackend:
+                 hot_bytes: Optional[int] = None,
+                 journal: bool = True,
+                 journal_segment_bytes: Optional[int] = None,
+                 secret: Optional[bytes] = None,
+                 sig_ttl_s: Optional[float] = None,
+                 ca_file: Optional[str] = None) -> StorageBackend:
     """Build a backend from a spec string; ``root`` anchors fs-backed
     layouts (each spec owns a distinct subtree so they never collide).
 
@@ -86,7 +104,11 @@ def make_backend(spec: str, root: str, *, registry=None,
         tiered                   memory hot tier over local
         tiered:<spec>            memory hot tier over any cold spec
                                  (write-back when the cold tier is
-                                 remote, write-through otherwise)
+                                 remote, write-through otherwise; the
+                                 write-back composition keeps a
+                                 crash-durable journal under
+                                 <root>/_journal unless ``journal`` is
+                                 False)
         replicated               3 LocalFS children, R=3 replicas, W=2
         replicated:<N>:<R>:<W>   N children under <root>/replica*,
                                  R = min(3, N) and W = majority(R)
@@ -95,6 +117,13 @@ def make_backend(spec: str, root: str, *, registry=None,
                                  over <root> (tests/CI: a real HTTP
                                  hop with zero external setup)
         remote:<url>             external object server at <url>
+        remotes:<url>            external object server over TLS
+                                 (https) — ``ca_file`` pins a
+                                 self-signed server certificate
+
+    ``secret`` (default: the ``VSS_REMOTE_SECRET`` env var) arms HMAC
+    signed-request auth on every remote client this spec builds — and,
+    for the self-hosted loopback server, on the server side too.
 
     Every level of a composed spec is wrapped with telemetry
     (`repro.obs.InstrumentedBackend`), so a ``tiered:remote`` store
@@ -110,6 +139,13 @@ def make_backend(spec: str, root: str, *, registry=None,
             return backend
         return instrument_backend(backend, kind=kind, registry=registry)
 
+    if secret is None:
+        env_secret = os.environ.get(SECRET_ENV_VAR)
+        secret = env_secret.encode() if env_secret else None
+    remote_kw = {"secret": secret, "ca_file": ca_file}
+    if sig_ttl_s is not None:
+        remote_kw["sig_ttl_s"] = sig_ttl_s
+
     spec = (spec or DEFAULT_SPEC).strip().lower()
     head, _, rest = spec.partition(":")
     if head in ("local", "localfs"):
@@ -121,19 +157,41 @@ def make_backend(spec: str, root: str, *, registry=None,
         return _wrap(ShardedBackend.local(root, n), "sharded")
     if head == "remote":
         if rest:
-            return _wrap(RemoteBackend(rest, registry=registry), "remote")
+            return _wrap(RemoteBackend(rest, registry=registry,
+                                       **remote_kw), "remote")
         return _wrap(
-            RemoteBackend.self_hosted(root, registry=registry), "remote"
+            RemoteBackend.self_hosted(root, registry=registry,
+                                      **remote_kw), "remote"
         )
+    if head == "remotes":
+        if not rest:
+            raise ValueError(
+                "remotes spec needs an explicit https url"
+                " (remotes:https://host:port) — serving TLS requires a"
+                " deployed certificate, so there is no self-hosted form"
+            )
+        url = rest if rest.startswith("https://") else f"https://{rest}"
+        return _wrap(RemoteBackend(url, registry=registry, **remote_kw),
+                     "remote")
     if head == "tiered":
         cold = make_backend(rest or DEFAULT_SPEC, root, registry=registry,
-                            instrument=instrument)
+                            instrument=instrument, journal=journal,
+                            secret=secret, sig_ttl_s=sig_ttl_s,
+                            ca_file=ca_file)
         # a remote cold tier gets the write-back composition (ISSUE:
         # fast local cache over a slow object store); every other cold
         # tier keeps the durable write-through discipline
+        write_back = unwrap(cold, RemoteBackend) is not None
         tier_kw = {} if hot_bytes is None else {"hot_bytes": hot_bytes}
+        if journal_segment_bytes is not None:
+            tier_kw["journal_segment_bytes"] = journal_segment_bytes
+        if write_back and journal:
+            # crash durability for acknowledged-but-unflushed writes:
+            # the journal lives on LOCAL disk next to the store, never
+            # inside the cold tier's object namespace
+            tier_kw["journal_dir"] = os.path.join(root, JOURNAL_DIRNAME)
         return _wrap(TieredBackend(
-            cold, write_back=unwrap(cold, RemoteBackend) is not None,
+            cold, write_back=write_back,
             registry=registry, **tier_kw,
         ), "tiered")
     if head == "replicated":
@@ -153,6 +211,8 @@ def make_backend(spec: str, root: str, *, registry=None,
 __all__ = [
     "ENV_VAR",
     "DEFAULT_SPEC",
+    "JOURNAL_DIRNAME",
+    "SECRET_ENV_VAR",
     "ChildDownError",
     "FaultInjectingBackend",
     "HashRing",
@@ -162,15 +222,19 @@ __all__ = [
     "ObjectNotFound",
     "ObjectServer",
     "ObjectStat",
+    "RangeNotSatisfiable",
     "RecoveryReport",
+    "RemoteAuthError",
     "RemoteBackend",
     "RemoteError",
     "ReplicatedBackend",
     "ReplicationError",
+    "RequestSigner",
     "ScrubReport",
     "ShardedBackend",
     "StorageBackend",
     "TieredBackend",
+    "WriteBackJournal",
     "make_backend",
     "scavenge",
     "scrub",

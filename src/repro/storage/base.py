@@ -39,6 +39,22 @@ class ObjectNotFound(KeyError):
     """Raised by ``get``/``stat``/``batch_get`` for an unknown key."""
 
 
+class RangeNotSatisfiable(ValueError):
+    """``get_range`` start at/past the object's end — the storage-level
+    twin of HTTP 416 (`Content-Range: bytes */<size>`).  Subclasses
+    ValueError so pre-existing ``except ValueError`` callers keep
+    working; new callers that need to distinguish a wrong byte index
+    (a planner bug, a stale offset table) from malformed arguments
+    catch this type."""
+
+    def __init__(self, key: str, start: int, size: Optional[int] = None):
+        detail = f" ({size} bytes)" if size is not None else ""
+        super().__init__(f"range start {start} outside {key!r}{detail}")
+        self.key = key
+        self.start = start
+        self.size = size
+
+
 def validate_key(key: str) -> str:
     """Reject keys that could escape a backend's namespace (absolute
     paths, ``..`` traversal).  The ONE copy of this security filter —
@@ -101,8 +117,10 @@ class StorageBackend(abc.ABC):
         agree, whatever its transport):
 
           * ``start < 0`` or ``length < 1`` raises ValueError;
-          * ``start`` at or past the object's end raises ValueError
-            (the caller's byte index is wrong — never silently empty);
+          * ``start`` at or past the object's end raises
+            `RangeNotSatisfiable` (a ValueError subclass — the HTTP-416
+            twin; the caller's byte index is wrong, never silently
+            empty);
           * a range running past the end returns the tail (fewer than
             ``length`` bytes), mirroring HTTP 206 semantics;
           * unknown keys raise ObjectNotFound.
@@ -115,9 +133,7 @@ class StorageBackend(abc.ABC):
             raise ValueError(f"bad range start={start} length={length}")
         data = self.get(key)
         if start >= len(data):
-            raise ValueError(
-                f"range start {start} outside {key!r} ({len(data)} bytes)"
-            )
+            raise RangeNotSatisfiable(key, start, len(data))
         return data[start : start + length]
 
     def batch_get_ranges(
@@ -186,7 +202,17 @@ class StorageBackend(abc.ABC):
 
     def recover(self, catalog) -> "RecoveryReport":
         """Reconcile backend contents against the catalog (startup
-        scavenger).  Default: the generic key-level scavenge."""
+        scavenger).  Default: the generic key-level scavenge.
+
+        Recovery contract for deferring (write-back) backends: any
+        write the backend **acknowledged** before the crash must be
+        readable before the scavenge runs — a journaled
+        `TieredBackend` replays its unflushed dirty set at
+        construction and lands it on the cold tier here, so the
+        scavenge never mistakes an acknowledged-but-unflushed object
+        for a lost one.  Only backends with no durability mechanism
+        for deferred writes may drop them (and then the scavenge drops
+        the rows, keeping indexed-implies-readable)."""
         from repro.storage.recovery import scavenge
 
         return scavenge(self, catalog)

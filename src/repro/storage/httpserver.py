@@ -25,6 +25,14 @@ with a ``registry`` / ``health`` callback; `VSS.start_metrics_server`
 builds a store-less instance (object routes answer 503) that serves
 only the observability pair.
 
+For untrusted networks the server optionally takes a shared ``secret``
+(every object-plane request must then carry a valid
+`repro.storage.signing.RequestSigner` signature; 401 otherwise — the
+observability pair stays open) and an ``ssl_context`` for TLS
+(``--certfile``/``--keyfile`` standalone).  Listings hide the
+server-private namespaces (``_rtmp/`` temps, ``_layout/``,
+``_journal/``) unless the request prefix explicitly reaches into one.
+
 Keys are URL-quoted path segments (``/`` survives).  Storage-level
 misses answer 404, anything else a backend raises answers 500 — which
 is exactly what `RemoteBackend`'s retry loop keys off, so server-side
@@ -53,14 +61,23 @@ from __future__ import annotations
 
 import json
 import re
+import ssl
 import threading
 import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Callable, Optional
 
 from repro.storage.base import ObjectNotFound, StorageBackend
+from repro.storage.signing import EXP_HEADER, RequestSigner, SIG_HEADER
 
 _RANGE_RE = re.compile(r"bytes=(\d+)-(\d*)$")
+
+# server-private namespaces hidden from listings: uncommitted temp
+# uploads (a listing consumed by scrub/recovery must never treat one
+# as a live object), the store-identity key, and write-back journal
+# state.  A caller that names a reserved namespace explicitly (the
+# client's own sweep_temps lists ``_rtmp/``) still sees inside it.
+_HIDDEN_PREFIXES = ("_rtmp/", "_layout/", "_journal/")
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -76,6 +93,32 @@ class _Handler(BaseHTTPRequestHandler):
         pass
 
     # -- helpers -----------------------------------------------------------
+    def _authorized(self) -> bool:
+        """Signed-request check (when the server has a signer).  The
+        MAC covers method + full path-with-query + expiry, so a token
+        cannot be replayed across verbs or re-aimed at another key.
+        ``/metrics`` and ``/healthz`` stay open — they are the
+        observability plane, carry no object data, and scrapers don't
+        sign.  401s close the connection: the request may carry an
+        unread body (PUT), and an unauthenticated peer gets no
+        keep-alive courtesy."""
+        signer = self.server.signer  # type: ignore[attr-defined]
+        if signer is None:
+            return True
+        bare = urllib.parse.urlsplit(self.path).path
+        if bare in ("/metrics", "/healthz"):
+            return True
+        reason = signer.verify(
+            self.command, self.path,
+            self.headers.get(EXP_HEADER), self.headers.get(SIG_HEADER),
+        )
+        if reason is None:
+            self.server.count_auth(True)  # type: ignore[attr-defined]
+            return True
+        self.server.count_auth(False)  # type: ignore[attr-defined]
+        self._respond(401, reason.encode(), close=True)
+        return False
+
     def _key(self) -> Optional[str]:
         path = urllib.parse.urlsplit(self.path).path
         if not path.startswith("/o/"):
@@ -130,6 +173,8 @@ class _Handler(BaseHTTPRequestHandler):
 
     # -- verbs -------------------------------------------------------------
     def do_GET(self):
+        if not self._authorized():
+            return
         path = urllib.parse.urlsplit(self.path).path
         if path == "/metrics":
             registry = self.server.registry  # type: ignore[attr-defined]
@@ -163,6 +208,9 @@ class _Handler(BaseHTTPRequestHandler):
             prefix = self._query().get("prefix", "")
             ok, keys = self._guard(self.store.list, prefix)
             if ok:
+                if not prefix.startswith(_HIDDEN_PREFIXES):
+                    keys = [k for k in keys
+                            if not k.startswith(_HIDDEN_PREFIXES)]
                 self._respond(200, "\n".join(sorted(keys)).encode())
             return
         key = self._key()
@@ -189,6 +237,8 @@ class _Handler(BaseHTTPRequestHandler):
         self._respond(200, data)
 
     def do_HEAD(self):
+        if not self._authorized():
+            return
         key = self._key()
         if key is None:
             return
@@ -197,6 +247,8 @@ class _Handler(BaseHTTPRequestHandler):
             self._respond(200, length=st.nbytes)
 
     def do_PUT(self):
+        if not self._authorized():
+            return
         key = self._key()
         if key is None:
             return
@@ -218,6 +270,8 @@ class _Handler(BaseHTTPRequestHandler):
             self._respond(204)
 
     def do_DELETE(self):
+        if not self._authorized():
+            return
         key = self._key()
         if key is None:
             return
@@ -226,6 +280,8 @@ class _Handler(BaseHTTPRequestHandler):
             self._respond(204)
 
     def do_POST(self):
+        if not self._authorized():
+            return
         path = urllib.parse.urlsplit(self.path).path
         if path != "/rename":
             self._respond(400, b"bad path", close=True)
@@ -256,13 +312,28 @@ class _Server(ThreadingHTTPServer):
     allow_reuse_address = True
 
     def __init__(self, addr, store: Optional[StorageBackend],
-                 registry=None, health: Optional[Callable] = None):
+                 registry=None, health: Optional[Callable] = None,
+                 signer: Optional[RequestSigner] = None):
         super().__init__(addr, _Handler)
         self.store = store
         self.registry = registry
         self.health = health
+        self.signer = signer
         self._rename_locks: dict = {}
         self._rename_locks_guard = threading.Lock()
+        from repro.obs.registry import default_registry
+
+        reg = registry or default_registry()
+        self._c_auth_accepted = reg.counter(
+            "vss_remote_auth_accepted_total",
+            "object-protocol requests with a valid signature")
+        self._c_auth_rejected = reg.counter(
+            "vss_remote_auth_rejected_total",
+            "object-protocol requests rejected 401"
+            " (missing/bad/expired signature)")
+
+    def count_auth(self, ok: bool) -> None:
+        (self._c_auth_accepted if ok else self._c_auth_rejected).inc()
 
     def rename_lock(self, dst: str) -> threading.Lock:
         with self._rename_locks_guard:
@@ -290,14 +361,38 @@ class ObjectServer:
     /metrics``; ``health`` (a zero-arg callable returning a dict with
     a ``"status"`` key) activates ``GET /healthz``.  ``store=None``
     builds a metrics-only server whose object routes answer 503.
+
+    Untrusted networks: ``secret`` (bytes) requires every object-plane
+    request to carry a valid `repro.storage.signing.RequestSigner`
+    signature (401 otherwise, counted on
+    ``vss_remote_auth_rejected_total``); ``ssl_context`` (a server-side
+    `ssl.SSLContext` loaded with a certificate chain + key) serves
+    TLS, flipping ``url`` to ``https://``.
     """
 
     def __init__(self, store: Optional[StorageBackend], *,
                  host: str = "127.0.0.1", port: int = 0,
-                 registry=None, health: Optional[Callable] = None):
+                 registry=None, health: Optional[Callable] = None,
+                 secret: Optional[bytes] = None,
+                 sig_ttl_s: Optional[float] = None,
+                 ssl_context: Optional[ssl.SSLContext] = None):
+        from repro.storage.signing import DEFAULT_SIG_TTL_S
+
         self.store = store
+        signer = None
+        if secret:
+            signer = RequestSigner(
+                secret,
+                ttl_s=DEFAULT_SIG_TTL_S if sig_ttl_s is None else sig_ttl_s,
+            )
+        self._tls = ssl_context is not None
         self._httpd = _Server((host, port), store,
-                              registry=registry, health=health)
+                              registry=registry, health=health,
+                              signer=signer)
+        if ssl_context is not None:
+            self._httpd.socket = ssl_context.wrap_socket(
+                self._httpd.socket, server_side=True
+            )
         self._thread = threading.Thread(
             target=self._httpd.serve_forever, daemon=True,
             name="vss-object-server",
@@ -307,7 +402,8 @@ class ObjectServer:
     @property
     def url(self) -> str:
         host, port = self._httpd.server_address[:2]
-        return f"http://{host}:{port}"
+        scheme = "https" if self._tls else "http"
+        return f"{scheme}://{host}:{port}"
 
     def close(self) -> None:
         self._httpd.shutdown()
@@ -317,6 +413,7 @@ class ObjectServer:
 
 def main(argv=None) -> None:  # pragma: no cover - operational entry point
     import argparse
+    import os
 
     from repro.obs.registry import default_registry
     from repro.storage import make_backend
@@ -335,11 +432,28 @@ def main(argv=None) -> None:  # pragma: no cover - operational entry point
     ap.add_argument("--metrics", action="store_true",
                     help="also serve GET /metrics from the process-global"
                     " registry")
+    ap.add_argument("--certfile", default=None,
+                    help="TLS certificate chain (PEM); with --keyfile,"
+                    " serves https")
+    ap.add_argument("--keyfile", default=None,
+                    help="TLS private key (PEM)")
+    ap.add_argument("--secret-env", default="VSS_REMOTE_SECRET",
+                    help="env var holding the shared request-signing"
+                    " secret; set it to require signed requests"
+                    " (401 otherwise)")
     args = ap.parse_args(argv)
     registry = default_registry() if args.metrics else None
+    ssl_context = None
+    if args.certfile:
+        import ssl as _ssl
+
+        ssl_context = _ssl.SSLContext(_ssl.PROTOCOL_TLS_SERVER)
+        ssl_context.load_cert_chain(args.certfile, args.keyfile)
+    secret = os.environ.get(args.secret_env, "").encode() or None
     store = make_backend(args.backend, args.root, registry=registry)
     server = ObjectServer(store, host=args.host, port=args.port,
-                          registry=registry)
+                          registry=registry, secret=secret,
+                          ssl_context=ssl_context)
     print(f"serving {args.backend} under {args.root} at {server.url}",
           flush=True)
     try:

@@ -17,6 +17,7 @@ from typing import List
 from repro.storage.base import (
     ObjectNotFound,
     ObjectStat,
+    RangeNotSatisfiable,
     StorageBackend,
     validate_key,
 )
@@ -72,10 +73,9 @@ class LocalFSBackend(StorageBackend):
             raise ValueError(f"bad range start={start} length={length}")
         try:
             with open(self._path(key), "rb") as f:
-                if start >= os.fstat(f.fileno()).st_size:
-                    raise ValueError(
-                        f"range start {start} outside {key!r}"
-                    )
+                size = os.fstat(f.fileno()).st_size
+                if start >= size:
+                    raise RangeNotSatisfiable(key, start, size)
                 f.seek(start)
                 return f.read(length)
         except FileNotFoundError:

@@ -17,6 +17,16 @@ Retry policy
   not transport weather.  Reads, stats, lists and deletes are
   idempotent, so blind retry is safe.
 
+Untrusted networks (TLS + signed requests)
+  An ``https://`` URL speaks TLS (stdlib ``ssl``; pass ``ca_file`` to
+  trust a self-signed server certificate, or a full ``ssl_context``).
+  A ``secret`` signs every request with `repro.storage.signing`'s
+  HMAC scheme (method + path + expiry in ``X-VSS-Exp``/``X-VSS-Sig``
+  headers, re-signed per retry attempt); the server's 401 raises
+  `RemoteAuthError` immediately — auth failures are configuration
+  errors and are NEVER retried.  ``make_backend``'s ``remotes:<url>``
+  spec is the TLS+auth composition of this backend.
+
 Idempotency-safe puts (publish-then-index friendly)
   ``put`` uploads to a unique temp key under ``_rtmp/`` and commits
   with one server-side rename.  A retried upload can therefore never
@@ -60,6 +70,7 @@ import http.client
 import itertools
 import os
 import socket
+import ssl
 import threading
 import time
 import urllib.parse
@@ -75,13 +86,16 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.storage.base import (
     ObjectNotFound,
     ObjectStat,
+    RangeNotSatisfiable,
     StorageBackend,
     validate_key,
 )
+from repro.storage.signing import DEFAULT_SIG_TTL_S, RequestSigner
 
 TEMP_PREFIX = "_rtmp/"  # uncommitted uploads live here (swept at startup)
 LAYOUT_KEY = "_layout/id"  # server-side store identity (layout guard)
-_RESERVED_PREFIXES = (TEMP_PREFIX, "_layout/")
+JOURNAL_PREFIX = "_journal/"  # write-back journal segments (local state)
+_RESERVED_PREFIXES = (TEMP_PREFIX, "_layout/", JOURNAL_PREFIX)
 
 DEFAULT_CONNECTIONS = 4
 DEFAULT_MAX_RETRIES = 4
@@ -93,6 +107,16 @@ DEFAULT_TIMEOUT = 30.0
 # a dropped keep-alive socket, a half-open connection)
 _RETRYABLE_EXCS = (http.client.HTTPException, ConnectionError,
                    socket.timeout, socket.error, OSError)
+
+
+def _size_from_416(content_range: Optional[str]) -> Optional[int]:
+    """Object size from a 416's ``Content-Range: bytes */<size>``."""
+    if not content_range or not content_range.startswith("bytes */"):
+        return None
+    try:
+        return int(content_range[len("bytes */"):])
+    except ValueError:
+        return None
 
 
 def _expected_partial_len(content_range: Optional[str], start: int,
@@ -125,6 +149,15 @@ class RemoteError(IOError):
         self.cause = cause
 
 
+class RemoteAuthError(RemoteError):
+    """The server rejected the request's authentication (HTTP 401).
+
+    Terminal on the FIRST response — never retried: a missing or wrong
+    secret is a configuration error, and an expired signature means
+    re-signing (which every attempt does anyway), so a retry budget
+    spent on 401s could only mask the misconfiguration."""
+
+
 class _Response:
     __slots__ = ("status", "data", "length", "content_range")
 
@@ -149,6 +182,10 @@ class RemoteBackend(StorageBackend):
         backoff_max: float = DEFAULT_BACKOFF_MAX,
         timeout: float = DEFAULT_TIMEOUT,
         hedge_threshold: Optional[float] = None,
+        secret: Optional[bytes] = None,
+        sig_ttl_s: float = DEFAULT_SIG_TTL_S,
+        ssl_context: Optional[ssl.SSLContext] = None,
+        ca_file: Optional[str] = None,
         registry=None,
         _owned_server=None,
     ):
@@ -157,8 +194,8 @@ class RemoteBackend(StorageBackend):
                 f"hedge_threshold must be positive, got {hedge_threshold}"
             )
         parts = urllib.parse.urlsplit(url)
-        if parts.scheme != "http" or not parts.hostname:
-            raise ValueError(f"RemoteBackend needs an http:// url, got"
+        if parts.scheme not in ("http", "https") or not parts.hostname:
+            raise ValueError(f"RemoteBackend needs an http(s):// url, got"
                              f" {url!r}")
         if parts.path not in ("", "/"):
             raise ValueError(
@@ -167,7 +204,21 @@ class RemoteBackend(StorageBackend):
             )
         self.url = url.rstrip("/")
         self.host = parts.hostname
-        self.port = parts.port or 80
+        self.tls = parts.scheme == "https"
+        self.port = parts.port or (443 if self.tls else 80)
+        # TLS client context: an explicit ssl.SSLContext wins; else a
+        # default-verifying context, trusting ``ca_file`` when given
+        # (how a self-signed deployment pins its server certificate)
+        self._ssl_context: Optional[ssl.SSLContext] = None
+        if self.tls:
+            self._ssl_context = (
+                ssl_context if ssl_context is not None
+                else ssl.create_default_context(cafile=ca_file)
+            )
+        self._signer = (
+            RequestSigner(secret, ttl_s=sig_ttl_s)
+            if secret else None
+        )
         self.max_retries = max(0, int(max_retries))
         self.backoff_base = backoff_base
         self.backoff_max = backoff_max
@@ -207,11 +258,20 @@ class RemoteBackend(StorageBackend):
         """Spin an in-process loopback `ObjectServer` over a LocalFS
         store under ``root`` and connect to it.  ``close()`` shuts the
         server down; reopening the same ``root`` re-hosts the same
-        objects (persistence lives in the files, not the process)."""
+        objects (persistence lives in the files, not the process).
+        A ``secret`` arms signed-request auth on BOTH ends, so the
+        loopback composition exercises the same wire auth a real
+        deployment runs."""
         from repro.storage.httpserver import ObjectServer
         from repro.storage.localfs import LocalFSBackend
 
-        server = ObjectServer(LocalFSBackend(root))
+        kw.pop("ca_file", None)  # loopback is plain http
+        server_kw = {}
+        if kw.get("secret"):
+            server_kw["secret"] = kw["secret"]
+            if kw.get("sig_ttl_s") is not None:
+                server_kw["sig_ttl_s"] = kw["sig_ttl_s"]
+        server = ObjectServer(LocalFSBackend(root), **server_kw)
         return cls(server.url, _owned_server=server, **kw)
 
     # -- connection pool ---------------------------------------------------
@@ -271,6 +331,11 @@ class RemoteBackend(StorageBackend):
             if self._idle:
                 return self._idle.pop()
         self._c_conns_created.inc()
+        if self.tls:
+            return http.client.HTTPSConnection(
+                self.host, self.port, timeout=self.timeout,
+                context=self._ssl_context,
+            )
         return http.client.HTTPConnection(
             self.host, self.port, timeout=self.timeout
         )
@@ -290,23 +355,36 @@ class RemoteBackend(StorageBackend):
     ) -> _Response:
         """One request with bounded exponential-backoff retries on
         connection errors and 5xx.  4xx answers return to the caller —
-        they are the protocol speaking, not the network failing."""
+        they are the protocol speaking, not the network failing — and
+        401 raises `RemoteAuthError` immediately (misconfigured or
+        missing secret; retrying cannot help and would hide it)."""
         last: Optional[BaseException] = None
         for attempt in range(self.max_retries + 1):
             if attempt:
                 self._c_retries.inc()
                 time.sleep(min(self.backoff_max,
                                self.backoff_base * (2 ** (attempt - 1))))
+            hdrs = dict(headers or {})
+            if self._signer is not None:
+                # sign per attempt: a retry delayed past the signature
+                # TTL must not 401 on a stale expiry
+                hdrs.update(self._signer.headers(method, path))
             conn = self._borrow()
             try:
-                conn.request(method, path, body=body,
-                             headers=dict(headers or {}))
+                conn.request(method, path, body=body, headers=hdrs)
                 resp = conn.getresponse()
                 data = resp.read()
             except _RETRYABLE_EXCS as exc:
                 conn.close()
                 last = exc
                 continue
+            if resp.status == 401:
+                self._give_back(conn)
+                raise RemoteAuthError(
+                    f"{method} {path} -> 401:"
+                    f" {data[:200].decode(errors='replace')}"
+                    f" (shared secret missing or wrong — not retried)"
+                )
             if resp.status >= 500:
                 self._give_back(conn)
                 last = RemoteError(
@@ -435,13 +513,14 @@ class RemoteBackend(StorageBackend):
             if r.status == 404:
                 raise ObjectNotFound(key)
             if r.status == 416:
-                raise ValueError(f"range {start}-{end} outside {key!r}")
+                raise RangeNotSatisfiable(
+                    key, start, _size_from_416(r.content_range))
             if r.status == 200:
                 # a server that ignores Range answers 200 + full body;
                 # slice client-side rather than hand back the whole
                 # object as if it were the requested window
                 if start >= len(r.data):
-                    raise ValueError(f"range {start}-{end} outside {key!r}")
+                    raise RangeNotSatisfiable(key, start, len(r.data))
                 return r.data[start:start + length]
             if r.status != 206:
                 raise RemoteError(f"ranged GET {key!r} -> {r.status}")

@@ -22,11 +22,15 @@ durability contract callers get from ``put`` therefore moves to
 ``flush``/``close``/``ensure_durable`` — the ingest path calls
 ``ensure_durable`` between each publish window's ``batch_put`` and its
 catalog commit, so source-of-truth video is never indexed while its
-bytes sit only in the volatile tier; what a crash can lose is
-uncommitted tail plus derived-view admissions, and startup recovery
-drops those rows exactly like any other lost object
-(indexed-implies-readable is restored by dropping, never by
-dangling).
+bytes sit only in the volatile tier.  With a **write-back journal**
+(``journal_dir=...`` — what ``tiered:remote`` builds by default) the
+volatile tier stops being a durability hole at all: every dirty
+admission is appended to a local append-only journal and fsync'd
+before ``put`` returns, startup replay rebuilds the dirty set from
+whatever a crash left (cross-checking the cold tier so an
+already-flushed record is never re-uploaded), and ``recover()`` lands
+the replayed set on the cold tier before the scavenge runs — no
+acknowledged write is ever dropped.  See `repro.storage.journal`.
 
 Spill (demotion from hot) never deletes durable data — the cold copy
 is authoritative — and its *ordering* is not decided here: the store
@@ -43,12 +47,20 @@ fragments over equal-cost fragments that would pay the round trip.
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.obs.registry import default_registry
-from repro.storage.base import ObjectStat, StorageBackend
+from repro.storage.base import (
+    ObjectStat,
+    RangeNotSatisfiable,
+    StorageBackend,
+)
+from repro.storage.journal import DEFAULT_SEGMENT_BYTES, WriteBackJournal
+
+_log = logging.getLogger(__name__)
 
 DEFAULT_HOT_BYTES = 256 * 1024 * 1024
 FLUSH_MAX_ATTEMPTS = 3     # terminal failure after this many tries
@@ -66,6 +78,8 @@ class TieredBackend(StorageBackend):
         *,
         hot_bytes: int = DEFAULT_HOT_BYTES,
         write_back: bool = False,
+        journal_dir: Optional[str] = None,
+        journal_segment_bytes: int = DEFAULT_SEGMENT_BYTES,
         registry=None,
     ):
         self.cold = cold
@@ -86,6 +100,8 @@ class TieredBackend(StorageBackend):
         self._failed: Dict[str, BaseException] = {}  # terminal failures
         self._stop = False
         self._flusher: Optional[threading.Thread] = None
+        self._demote_skipped: Set[str] = set()  # pinned keys demote skipped
+        self._demote_warned = False
         # -- telemetry (repro.obs): hit/miss/spill counters + hot-tier
         # gauges.  Handles are per-instance (exact), series process-wide
         # (summed on /metrics); gauges sample through weak refs so a
@@ -103,6 +119,10 @@ class TieredBackend(StorageBackend):
         self._c_flush_failures = reg.counter(
             "vss_cache_writeback_flush_failures_total",
             "failed flush attempts (terminal after FLUSH_MAX_ATTEMPTS)")
+        self._c_demote_pinned = reg.counter(
+            "vss_cache_demote_pinned_total",
+            "demote targets skipped because a terminal flush failure"
+            " pins them hot")
         reg.gauge_fn("vss_cache_hot_bytes", self._hot_bytes_now,
                      "bytes resident in the hot tier")
         reg.gauge_fn("vss_cache_hot_objects", self._hot_count_now,
@@ -113,12 +133,48 @@ class TieredBackend(StorageBackend):
         reg.gauge_fn("vss_cache_writeback_pinned_objects",
                      self._pinned_count_now,
                      "objects pinned hot by terminal flush failures")
+        # -- crash-durable write-back: journal + startup replay -------------
+        self._journal: Optional[WriteBackJournal] = None
+        if write_back and journal_dir is not None:
+            self._journal = WriteBackJournal(
+                journal_dir, segment_bytes=journal_segment_bytes,
+                registry=registry,
+            )
+            self._replay_journal()
         if write_back:
             self._flusher = threading.Thread(
                 target=self._flush_loop, daemon=True,
                 name="vss-tiered-flush",
             )
             self._flusher.start()
+
+    def _replay_journal(self) -> None:
+        """Rebuild the dirty set from journal records a crash left.
+        Each surviving record is cross-checked against the cold tier
+        first: a key whose flush landed but whose (unfsync'd) COMMIT
+        record was lost is recognized by its cold copy already holding
+        exactly the journaled bytes — it is committed now instead of
+        re-uploaded, which is what makes replay idempotent.  A cold
+        tier that is down (or missing the key) keeps the record dirty:
+        possibly a redundant upload later, never a lost write."""
+        replayed = self._journal.replay()
+        settled = []
+        for key, data in replayed.items():
+            try:
+                if self.cold.get(key) == data:
+                    settled.append(key)
+                    continue
+            except Exception:
+                pass  # unreachable/missing cold copy: stay dirty
+            self._admit(key, data, dirty=True)
+        if settled:
+            self._journal.append_commit(settled)
+        if replayed:
+            _log.info(
+                "write-back journal replay: %d unflushed object(s)"
+                " re-queued, %d already on the cold tier",
+                len(replayed) - len(settled), len(settled),
+            )
 
     def set_priority_fn(self, fn: Optional[PriorityFn]) -> None:
         self._priority_fn = fn
@@ -152,6 +208,7 @@ class TieredBackend(StorageBackend):
                 # a fresh write supersedes any terminal failure state
                 self._failed.pop(key, None)
                 self._attempts.pop(key, None)
+                self._demote_skipped.discard(key)
                 self._cv.notify_all()
         self._spill()
 
@@ -235,6 +292,8 @@ class TieredBackend(StorageBackend):
                         self._attempts.pop(victim, None)
                         self._drop_one_locked(victim)
                         self._c_spills.inc()
+                        if self._journal is not None:
+                            self._journal.append_commit([victim])
                     # a newer write raced in: leave it for the flusher
             finally:
                 with self._cv:
@@ -302,6 +361,11 @@ class TieredBackend(StorageBackend):
                     self._attempts.pop(key, None)
                     if self._dirty.get(key) == gen:
                         del self._dirty[key]
+                        # journal the commit only when THIS flush is
+                        # what settled the key — a newer journaled PUT
+                        # must not be masked by our COMMIT record
+                        if self._journal is not None:
+                            self._journal.append_commit([key])
                 else:
                     self._c_flush_failures.inc()
                     n_fail = self._attempts.get(key, 0) + 1
@@ -381,11 +445,13 @@ class TieredBackend(StorageBackend):
                         self._c_flushes.inc(len(batch))
                     else:
                         self._c_flush_failures.inc(len(batch))
+                    settled = []
                     for k, (gen, _d) in batch.items():
                         if err is None:
                             self._attempts.pop(k, None)
                             if self._dirty.get(k) == gen:
                                 del self._dirty[k]
+                                settled.append(k)
                         else:
                             # re-flushing keys the failed batch DID
                             # land is benign (idempotent last-wins);
@@ -394,6 +460,8 @@ class TieredBackend(StorageBackend):
                             self._attempts[k] = n
                             if n >= FLUSH_MAX_ATTEMPTS:
                                 self._failed[k] = err
+                    if settled and self._journal is not None:
+                        self._journal.append_commit(settled)
             finally:
                 with self._cv:
                     for k in batch:
@@ -411,7 +479,13 @@ class TieredBackend(StorageBackend):
         adaptive policy's cold-epoch seam.  Never destroys data: a
         dirty object is flushed to the cold tier first, and objects
         pinned by terminal flush failures (or mid-flight) are skipped.
-        Returns how many hot copies were dropped."""
+        Returns how many hot copies were dropped.
+
+        A flush failure here is never silent: the pinned keys are
+        counted on ``vss_cache_demote_pinned_total``, logged once per
+        tier instance, and reported by `stats()` under
+        ``demote_skipped_pinned`` until they un-pin (a later
+        successful flush, `retry_failed`, or a fresh write)."""
         with self._lock:
             targets = [k for k in keys if k in self._hot]
         if not targets:
@@ -422,8 +496,24 @@ class TieredBackend(StorageBackend):
             if dirty:
                 try:
                     self.flush(dirty)
-                except RuntimeError:
-                    pass  # pinned keys stay hot; drop what settled
+                except RuntimeError as exc:
+                    # pinned keys stay hot; drop what settled — but
+                    # surface the skip instead of swallowing it
+                    with self._cv:
+                        pinned = sorted(
+                            k for k in dirty if k in self._failed)
+                        self._demote_skipped.update(pinned)
+                    self._c_demote_pinned.inc(len(pinned))
+                    if not self._demote_warned:
+                        self._demote_warned = True
+                        _log.warning(
+                            "demote: %d object(s) pinned hot by flush"
+                            " failures (first: %r); cold tier down?"
+                            " — see stats()['demote_skipped_pinned']"
+                            " and retry_failed(): %s",
+                            len(pinned), pinned[0] if pinned else None,
+                            exc,
+                        )
         dropped = 0
         with self._cv:
             for k in targets:
@@ -435,6 +525,24 @@ class TieredBackend(StorageBackend):
                     dropped += 1
         return dropped
 
+    def stats(self) -> Dict[str, object]:
+        """Point-in-time tier health: hot-tier occupancy, the dirty
+        backlog, terminally-pinned keys, and which demote targets were
+        skipped because a flush failure pins them hot."""
+        with self._cv:
+            out: Dict[str, object] = {
+                "hot_bytes": self._hot_total,
+                "hot_objects": len(self._hot),
+                "dirty_objects": len(self._dirty),
+                "pinned_objects": len(self._failed),
+                "pinned_keys": sorted(self._failed),
+                "demote_skipped_pinned": sorted(self._demote_skipped),
+            }
+        if self._journal is not None:
+            out["journal_pending_objects"] = len(
+                self._journal.pending_keys())
+        return out
+
     def retry_failed(self) -> int:
         """Un-pin terminally-failed write-back objects (after the cold
         tier recovers): their failure state clears, they stay dirty,
@@ -444,6 +552,7 @@ class TieredBackend(StorageBackend):
             n = len(self._failed)
             self._failed.clear()
             self._attempts.clear()
+            self._demote_skipped.clear()
             self._cv.notify_all()
         return n
 
@@ -487,8 +596,17 @@ class TieredBackend(StorageBackend):
                     if key in self._hot:
                         self._drop_one_locked(key)
                     self._cv.notify_all()
+                if was_dirty and self._journal is not None:
+                    # the journaled old value is superseded by a value
+                    # that is already durable: settle its record
+                    self._journal.append_commit([key])
                 return
             self._admit(key, data, dirty=True)
+            if self._journal is not None:
+                # fsync'd before the put acknowledges — the bytes that
+                # back the acknowledgement now live on local disk, not
+                # just in the volatile hot tier
+                self._journal.append_put(key, data)
             # backpressure during a cold-tier outage: once pinned
             # (terminally unflushable) objects hold the tier over
             # budget, accepting more dirty bytes at memory speed would
@@ -515,8 +633,31 @@ class TieredBackend(StorageBackend):
 
     def batch_put(self, items: Sequence[Tuple[str, bytes]]) -> None:
         if self.write_back:
+            if self._journal is None:
+                for key, data in items:
+                    self.put(key, data)
+                return
+            # journal the whole admission group under ONE fsync (the
+            # <15% fig26 budget lives or dies here), oversized objects
+            # excepted — they take the write-through degrade in put()
+            group: List[Tuple[str, bytes]] = []
             for key, data in items:
-                self.put(key, data)
+                data = bytes(data)
+                if len(data) > self.hot_bytes:
+                    self.put(key, data)
+                    continue
+                self._admit(key, data, dirty=True)
+                group.append((key, data))
+            self._journal.append_puts(group)
+            with self._cv:
+                if self._failed and self._hot_total > self.hot_bytes:
+                    key0, exc = next(iter(self._failed.items()))
+                    raise RuntimeError(
+                        f"write-back cache over budget with"
+                        f" {len(self._failed)} object(s) pinned by flush"
+                        f" failures (first: {key0!r}); cold tier down?"
+                        f" — see retry_failed()"
+                    ) from exc
             return
         self.cold.batch_put(items)  # durable copies first (write-through)
         for key, data in items:
@@ -555,7 +696,7 @@ class TieredBackend(StorageBackend):
         if data is not None:
             self._c_hits.inc()
             if start >= len(data):
-                raise ValueError(f"range start {start} outside {key!r}")
+                raise RangeNotSatisfiable(key, start, len(data))
             return data[start : start + length]
         self._c_misses.inc()
         return self.cold.get_range(key, start, length)
@@ -575,7 +716,7 @@ class TieredBackend(StorageBackend):
             if s < 0 or n < 1:
                 raise ValueError(f"bad range start={s} length={n}")
             if s >= len(data):
-                raise ValueError(f"range start {s} outside {k!r}")
+                raise RangeNotSatisfiable(k, s, len(data))
             results[i] = data[s : s + n]
         self._c_hits.inc(len(reqs) - len(missing))
         self._c_misses.inc(len(missing))
@@ -608,6 +749,10 @@ class TieredBackend(StorageBackend):
             if old is not None:
                 self._hot_total -= len(old)
             self._insert_seq.pop(key, None)
+        if self._journal is not None:
+            # fsync'd before the cold delete: a lost DELETE record
+            # would make replay resurrect (re-upload) the object
+            self._journal.append_delete(key)
         self.cold.delete(key)
 
     def stat(self, key: str) -> ObjectStat:
@@ -701,4 +846,6 @@ class TieredBackend(StorageBackend):
                 self._cv.notify_all()
             if self._flusher is not None:
                 self._flusher.join(timeout=5.0)
+            if self._journal is not None:
+                self._journal.close()
             self.cold.close()

@@ -5,6 +5,10 @@ Contract-level conformance (roundtrips, batches, atomicity, listing)
 runs in test_storage.py's `TestBackendConformance` matrix; chaos-level
 behaviour (retry exhaustion, torn writes, hangs) in test_faults.py.
 This file covers what is specific to the HTTP seam."""
+import ssl
+import time
+import urllib.error
+import urllib.parse
 import urllib.request
 
 import numpy as np
@@ -15,7 +19,10 @@ from repro.storage import (
     MemoryBackend,
     ObjectNotFound,
     ObjectServer,
+    RemoteAuthError,
     RemoteBackend,
+    RemoteError,
+    RequestSigner,
     TieredBackend,
 )
 from repro.storage.remote import TEMP_PREFIX, _Response
@@ -533,3 +540,156 @@ def test_hedge_threshold_validation():
         RemoteBackend("http://127.0.0.1:1", hedge_threshold=0.0)
     with pytest.raises(ValueError):
         RemoteBackend("http://127.0.0.1:1", hedge_threshold=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# untrusted networks: HMAC signed requests + TLS
+# ---------------------------------------------------------------------------
+
+_SECRET = b"remote-auth-test-secret"
+
+
+def test_signed_requests_authenticate_the_wire():
+    server = ObjectServer(MemoryBackend(), secret=_SECRET)
+    rb = RemoteBackend(server.url, secret=_SECRET, backoff_base=0.01)
+    try:
+        rb.put("v/1.tvc", b"payload")
+        assert rb.get("v/1.tvc") == b"payload"
+        assert rb.get_range("v/1.tvc", 0, 4) == b"payl"
+        assert rb.stat("v/1.tvc").nbytes == 7
+        assert rb.list() == ["v/1.tvc"]
+        rb.delete("v/1.tvc")
+        assert not rb.exists("v/1.tvc")
+    finally:
+        rb.close()
+        server.close()
+
+
+def test_unauthenticated_and_tampered_requests_401_without_retry():
+    """Missing or wrong signatures are configuration errors: the
+    server answers 401, the client raises `RemoteAuthError` on the
+    FIRST attempt — hammering a doomed retry loop would only hide the
+    misconfiguration."""
+    store = MemoryBackend()
+    server = ObjectServer(store, secret=_SECRET)
+    good = RemoteBackend(server.url, secret=_SECRET, backoff_base=0.01)
+    anon = RemoteBackend(server.url, backoff_base=0.01)
+    tampered = RemoteBackend(server.url, secret=b"wrong-secret",
+                             backoff_base=0.01)
+    try:
+        good.put("k", b"x")
+        rejected0 = server._httpd._c_auth_rejected.value
+
+        with pytest.raises(RemoteAuthError):
+            anon.get("k")
+        assert anon.retries == 0  # terminal, never transport weather
+
+        with pytest.raises(RemoteAuthError):
+            tampered.get("k")
+        with pytest.raises(RemoteAuthError):
+            tampered.put("k", b"overwrite")
+        with pytest.raises(RemoteAuthError):
+            tampered.delete("k")
+        assert tampered.retries == 0
+        assert store.get("k") == b"x"  # nothing mutated
+        assert server._httpd._c_auth_rejected.value >= rejected0 + 4
+        assert good.get("k") == b"x"  # the honest client is unaffected
+    finally:
+        for b in (good, anon, tampered):
+            b.close()
+        server.close()
+
+
+def test_expired_signature_is_rejected():
+    store = MemoryBackend()
+    store.put("k", b"x")
+    server = ObjectServer(store, secret=_SECRET)
+    signer = RequestSigner(_SECRET)
+    try:
+        stale = signer.headers("GET", "/o/k", now=time.time() - 3600)
+        req = urllib.request.Request(server.url + "/o/k", headers=stale)
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req)
+        assert ei.value.code == 401
+        assert ei.value.read() == b"expired"
+        # extending the expiry header invalidates the MAC instead
+        forged = dict(signer.headers("GET", "/o/k", now=time.time() - 3600))
+        forged["X-VSS-Exp"] = str(int(time.time()) + 600)
+        req = urllib.request.Request(server.url + "/o/k", headers=forged)
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req)
+        assert ei.value.code == 401
+        assert ei.value.read() == b"bad-signature"
+        # a fresh signature over the same request is accepted
+        req = urllib.request.Request(
+            server.url + "/o/k", headers=signer.headers("GET", "/o/k"))
+        assert urllib.request.urlopen(req).read() == b"x"
+    finally:
+        server.close()
+
+
+def test_observability_endpoints_stay_open_on_secured_server():
+    """/healthz (and /metrics) are the monitoring plane — probes don't
+    hold store secrets; the object routes stay locked."""
+    server = ObjectServer(MemoryBackend(), secret=_SECRET,
+                          health=lambda: {"status": "ok"})
+    try:
+        with urllib.request.urlopen(server.url + "/healthz") as r:
+            assert r.status == 200
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(server.url + "/o/k")
+        assert ei.value.code == 401
+    finally:
+        server.close()
+
+
+def test_tls_roundtrip_with_pinned_self_signed_cert(tmp_path):
+    from test_storage import mint_tls_cert
+
+    cert, key = mint_tls_cert(str(tmp_path / "tls"))
+    ctx = ssl.SSLContext(ssl.PROTOCOL_TLS_SERVER)
+    ctx.load_cert_chain(cert, key)
+    server = ObjectServer(MemoryBackend(), secret=_SECRET, ssl_context=ctx)
+    assert server.url.startswith("https://")
+    rb = RemoteBackend(server.url, secret=_SECRET, ca_file=cert,
+                       backoff_base=0.01)
+    try:
+        rb.put("v/1.tvc", b"encrypted-in-flight")
+        assert rb.get("v/1.tvc") == b"encrypted-in-flight"
+        assert rb.get_range("v/1.tvc", 0, 9) == b"encrypted"
+        assert rb.list() == ["v/1.tvc"]
+    finally:
+        rb.close()
+
+    # a client that does NOT pin the cert refuses the connection —
+    # default verification rejects the self-signed chain
+    strict = RemoteBackend(server.url, secret=_SECRET, max_retries=0)
+    try:
+        with pytest.raises(RemoteError):
+            strict.get("v/1.tvc")
+    finally:
+        strict.close()
+        server.close()
+
+
+def test_server_list_hides_reserved_namespaces(served):
+    """The wire listing must not leak `_rtmp/` upload turds (or other
+    reserved namespaces) to clients that do no filtering of their own
+    — but an explicit reach-in prefix still answers, because startup
+    temp sweeps list `_rtmp/` to clean it."""
+    server, rb, store = served
+    rb.put("v/1.tvc", b"x")
+    store.put("_rtmp/turd", b"t")
+    store.put("_journal/seg-0000000000000000.vssj", b"j")
+    store.put("_layout/id", b"l")
+
+    def wire_list(prefix=""):
+        q = urllib.parse.urlencode({"prefix": prefix})
+        with urllib.request.urlopen(server.url + f"/list?{q}") as r:
+            return sorted(k for k in r.read().decode().split("\n") if k)
+
+    assert wire_list() == ["v/1.tvc"]
+    assert wire_list("v/") == ["v/1.tvc"]
+    assert wire_list("_rtmp/") == ["_rtmp/turd"]  # explicit reach-in
+    assert rb.sweep_temps() == 1
+    assert wire_list("_rtmp/") == []

@@ -1,5 +1,7 @@
 """`repro.storage`: backend conformance, sharding, tiering, recovery."""
 import os
+import ssl
+import subprocess
 import threading
 
 import numpy as np
@@ -10,6 +12,8 @@ from repro.storage import (
     LocalFSBackend,
     MemoryBackend,
     ObjectNotFound,
+    ObjectServer,
+    RangeNotSatisfiable,
     RemoteBackend,
     ReplicatedBackend,
     ShardedBackend,
@@ -20,11 +24,29 @@ from repro.storage import (
 from repro.storage.localfs import TEMP_MARKER
 
 # every backend configuration runs the identical conformance suite —
-# including the remote client against a live loopback object server and
-# a (quiet) fault wrapper proving the chaos shim preserves the contract
+# including the remote client against a live loopback object server
+# (plain, and TLS + signed-request auth), and a (quiet) fault wrapper
+# proving the chaos shim preserves the contract
 BACKEND_SPECS = ("memory", "local", "local:fsync", "sharded2", "sharded4",
                  "tiered", "replicated3", "replicated4r3", "remote",
-                 "tiered_remote", "fault_wrapped")
+                 "remotes", "tiered_remote", "fault_wrapped")
+
+_TLS_SECRET = b"conformance-suite-secret"
+
+
+def mint_tls_cert(dirpath):
+    """Self-signed localhost cert via the openssl CLI (no extra deps)."""
+    os.makedirs(dirpath, exist_ok=True)
+    cert = os.path.join(dirpath, "cert.pem")
+    key = os.path.join(dirpath, "key.pem")
+    subprocess.run(
+        ["openssl", "req", "-x509", "-newkey", "rsa:2048", "-nodes",
+         "-keyout", key, "-out", cert, "-days", "1",
+         "-subj", "/CN=127.0.0.1",
+         "-addext", "subjectAltName=IP:127.0.0.1"],
+        check=True, capture_output=True,
+    )
+    return cert, key
 
 
 def _make(spec, root):
@@ -46,6 +68,18 @@ def _make(spec, root):
         return ReplicatedBackend.local(root, 4, replicas=3, write_quorum=2)
     if spec == "remote":
         return RemoteBackend.self_hosted(root, backoff_base=0.01)
+    if spec == "remotes":
+        # the untrusted-network composition: TLS on the wire + HMAC
+        # signed requests, through the `remotes:<url>` spec grammar
+        cert, key = mint_tls_cert(root + "-tls")
+        ctx = ssl.SSLContext(ssl.PROTOCOL_TLS_SERVER)
+        ctx.load_cert_chain(cert, key)
+        server = ObjectServer(LocalFSBackend(root), secret=_TLS_SECRET,
+                              ssl_context=ctx)
+        b = make_backend(f"remotes:{server.url.split('://', 1)[1]}", root,
+                         secret=_TLS_SECRET, ca_file=cert)
+        unwrap(b, RemoteBackend)._server = server  # close() owns it
+        return b
     if spec == "tiered_remote":
         return make_backend("tiered:remote", root)
     if spec == "fault_wrapped":
@@ -195,10 +229,14 @@ class TestBackendConformance:
         for start, length in ((-1, 5), (0, 0), (0, -3)):
             with pytest.raises(ValueError):
                 backend.get_range("r", start, length)
-        with pytest.raises(ValueError):
+        # start at/past the end is the storage twin of HTTP 416 — every
+        # backend raises the typed subclass (still a ValueError)
+        with pytest.raises(RangeNotSatisfiable):
             backend.get_range("r", 10, 1)  # start at end: unsatisfiable
-        with pytest.raises(ValueError):
+        with pytest.raises(RangeNotSatisfiable):
             backend.get_range("r", 99, 1)  # start past end
+        with pytest.raises(RangeNotSatisfiable):
+            backend.batch_get_ranges([("r", 25, 4)])
 
     def test_get_range_missing_key(self, backend):
         with pytest.raises(ObjectNotFound):
@@ -463,6 +501,47 @@ def test_writeback_flush_failure_pins_object_hot(tmp_path):
     b.put("k", b"precious")  # fresh write clears the failure state
     b.flush()
     assert cold.get("k") == b"precious"
+    b.close()
+
+
+def test_writeback_hot_hit_range_past_end_is_typed(tmp_path):
+    """A ranged read answered from the write-back hot tier must raise
+    the same typed `RangeNotSatisfiable` the cold backends map to HTTP
+    416 — not a bare ValueError the serving layer can't route."""
+    b = TieredBackend(MemoryBackend(), hot_bytes=1 << 20, write_back=True)
+    b.put("k", b"0123456789")  # acknowledged: dirty, served hot
+    with pytest.raises(RangeNotSatisfiable) as ei:
+        b.get_range("k", 10, 1)
+    assert (ei.value.key, ei.value.start, ei.value.size) == ("k", 10, 10)
+    with pytest.raises(RangeNotSatisfiable):
+        b.batch_get_ranges([("k", 0, 2), ("k", 99, 1)])
+    b.close()
+
+
+def test_demote_surfaces_pinned_keys_during_cold_outage(tmp_path):
+    """demote() during a cold-tier outage must not silently swallow the
+    flush failure: pinned keys stay hot (no data loss), are counted on
+    vss_cache_demote_pinned_total, and show up in stats() until the
+    cold tier recovers."""
+    cold = _DownCold()
+    b = TieredBackend(cold, hot_bytes=1 << 20, write_back=True)
+    b.put("k1", b"a" * 64)
+    b.put("k2", b"b" * 64)
+    before = b._c_demote_pinned.value
+    assert b.demote(["k1", "k2"]) == 0  # nothing dropped, nothing lost
+    assert b._c_demote_pinned.value == before + 2
+    st = b.stats()
+    assert st["demote_skipped_pinned"] == ["k1", "k2"]
+    assert st["pinned_keys"] == ["k1", "k2"]
+    assert b.get("k1") == b"a" * 64  # the acknowledged values survive
+    # recovery: un-pin, flush, and the demote now lands cleanly
+    cold.down = False
+    assert b.retry_failed() == 2
+    b.flush()
+    assert b.stats()["demote_skipped_pinned"] == []
+    assert b.demote(["k1", "k2"]) == 2
+    assert cold.get("k1") == b"a" * 64
+    assert cold.get("k2") == b"b" * 64
     b.close()
 
 
